@@ -1,0 +1,49 @@
+"""Shared benchmark plumbing.
+
+Every benchmark module exposes run() -> list[(name, us_per_call, derived)]
+and is registered in run.py.  REPRO_BENCH_FAST=1 trims search budgets
+(same code paths, smaller populations) for CI-speed runs.
+"""
+from __future__ import annotations
+
+import math
+import os
+import time
+
+from repro.core.chiplets import Chiplet, default_pool
+from repro.core.fusion import GAConfig
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+
+def ga_budget(pop: int = 10, gens: int = 10, **kw) -> GAConfig:
+    if FAST:
+        pop, gens = min(pop, 6), min(gens, 2)
+    return GAConfig(population=pop, generations=gens, **kw)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) * 1e6
+    return out, dt
+
+
+def geomean(xs) -> float:
+    xs = [max(x, 1e-30) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / max(len(xs), 1))
+
+
+def utilization(sol) -> float:
+    """Fraction of deployed peak FLOPs actually used at interval T."""
+    used = sum(o.flops_per_sample for o in sol.stages)
+    deployed = sum(o.cfg.chiplet.peak_flops * o.cfg.tp * o.repeat
+                   for o in sol.stages)
+    return used / max(deployed * sol.T, 1e-30)
+
+
+def fmt(x: float, nd: int = 3) -> str:
+    return f"{x:.{nd}g}"
+
+
+HOMOG_CANDIDATES = tuple(default_pool())

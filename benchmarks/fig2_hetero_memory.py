@@ -1,0 +1,87 @@
+"""Paper Fig. 2: heterogeneous memory maintains iso-latency while cutting
+memory cost 25.4-96.7% (Insight 1: no memory wall, only compute-memory
+mismatches).
+
+Method: per network, build the all-HBM3 design (homogeneous memory,
+paper's baseline) and record its latency; then let the GA allocate
+memory types per fusion group under the SAME latency budget; report the
+memory-$ reduction at iso-latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import operators
+from repro.core.chiplets import default_pool
+from repro.core.fusion import (GAConfig, Requirement, optimize_fusion)
+from repro.core.memory import HBM3, MEMORY_POOL
+
+from .common import fmt, ga_budget, timed
+
+NETWORKS = ["resnet50", "mobilenetv3", "efficientnet", "replknet31b",
+            "vit_b16", "opt66b_prefill", "opt66b_decode"]
+
+
+def _mem_cost(sol) -> float:
+    # StageOptions arrive pre-scaled by `repeat` in hw cost; memory cost
+    # here is recomputed per physical stage copy.
+    return sum(o.cfg.memory.cost(o.cfg.mem_units) * o.repeat
+               for o in sol.stages)
+
+
+def run():
+    graphs = operators.paper_workloads(seq=2048)
+    pool = default_pool()
+    rows = []
+    reductions = []
+    for name in NETWORKS:
+        g = graphs[name]
+
+        def solve():
+            # Fix the fusion plan once (so the comparison is purely about
+            # MEMORY ALLOCATION, as in Fig. 2), then:
+            #   baseline: every group pinned to HBM3E;
+            #   hetero:   per-group memory free, iso-latency (T <= T_hbm),
+            #             cost-aware — compute-bound groups leave HBM.
+            import repro.core.fusion as F
+            from repro.core import costmodel
+            from repro.core.convexhull import (default_latency_grid,
+                                               solve_pipeline)
+            from repro.core.memory import MEMORY_POOL
+            from repro.core.perfmodel import (enumerate_stage_options,
+                                              scale_option)
+            base = optimize_fusion(g, pool, objective="energy",
+                                   cfg=ga_budget(pop=6, gens=2))
+            n_st = sum(gr.repeat for gr in base.groups)
+
+            def options(memories):
+                out = []
+                for gr in base.groups:
+                    raw = enumerate_stage_options(
+                        gr.ops, pool, memories=memories, name=gr.name)
+                    out.append([scale_option(o, gr.repeat) for o in
+                                costmodel.price_stage_options(raw)])
+                return out
+
+            o_hbm = options((HBM3,))
+            grid = default_latency_grid(o_hbm)
+            hbm = solve_pipeline(o_hbm, grid, objective="energy",
+                                 n_stages=n_st)
+            o_all = options(tuple(MEMORY_POOL))
+            het = solve_pipeline(o_all, grid, objective="energy_cost",
+                                 max_interval=hbm.T, n_stages=n_st)
+            return hbm, het
+
+        (hbm, het), t_us = timed(solve)
+        c0, c1 = _mem_cost(hbm), _mem_cost(het)
+        lat_ratio = het.T / hbm.T
+        red = 100.0 * (1 - c1 / max(c0, 1e-12))
+        reductions.append(red)
+        rows.append((f"fig2.{name}", t_us,
+                     f"memcost_reduction={fmt(red)}%"
+                     f" latency_ratio={fmt(lat_ratio)}"))
+    rows.append(("fig2.summary", sum(r[1] for r in rows),
+                 f"memcost_reduction_range="
+                 f"{fmt(min(reductions))}%..{fmt(max(reductions))}%"
+                 f" (paper: 25.4%..96.7% at iso-latency)"))
+    return rows

@@ -1,0 +1,54 @@
+"""§Roofline harness: renders the roofline table from the dry-run
+artifacts in experiments/dryrun/*.json (see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import fmt
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if mesh is None or r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [("roofline.missing", 0.0,
+                 "run `python -m repro.launch.dryrun --all --mesh both`")]
+    n_ok = 0
+    for r in recs:
+        variant = f".{r['tag']}" if r.get("tag") else ""
+        tag = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}{variant}"
+        if not r.get("ok"):
+            rows.append((tag, 0.0, f"FAILED {r.get('error', '?')[:80]}"))
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        t = {"c": rf["t_compute"], "m": rf["t_memory"],
+             "x": rf["t_collective"]}
+        dom = max(t.values())
+        frac = t["c"] / max(dom, 1e-30)     # compute fraction of roofline
+        rows.append((tag, (r.get("lower_s", 0) + r.get("compile_s", 0))
+                     * 1e6,
+                     f"t_comp={fmt(t['c'])}s t_mem={fmt(t['m'])}s"
+                     f" t_coll={fmt(t['x'])}s"
+                     f" bottleneck={rf['bottleneck']}"
+                     f" roofline_frac={fmt(frac)}"
+                     f" mf_ratio={fmt(rf['model_flops_ratio'])}"))
+    rows.append(("roofline.summary", 0.0,
+                 f"cells_ok={n_ok}/{len(recs)}"))
+    return rows

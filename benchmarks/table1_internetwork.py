@@ -1,0 +1,98 @@
+"""Paper Table 1: inter-network accelerator performance penalty matrix.
+
+Optimize a (homogeneous-tile, as in the paper caption) accelerator for
+each column network, then evaluate every row network on it.  Cells are
+(energy, EDP) normalized to the row network's own optimal accelerator;
+off-diagonal >= 1 demonstrates "one size fits none" (Insight 4).
+"""
+from __future__ import annotations
+
+from repro.core import operators
+from repro.core.chiplets import default_pool
+from repro.core.codesign import best_homogeneous_design, design_for_network
+from repro.core.fusion import GAConfig, Requirement, optimize_fusion
+
+from .common import fmt, ga_budget, timed
+
+NETWORKS = ["replknet31b", "resnet50", "opt66b_prefill_b1",
+            "opt66b_decode_b1", "opt66b_prefill_b4"]
+
+
+def _graphs():
+    g = operators.paper_workloads(seq=2048)
+    return {
+        "replknet31b": (g["replknet31b"], None),
+        "resnet50": (g["resnet50"], None),
+        "opt66b_prefill_b1": (g["opt66b_prefill"], 1),
+        "opt66b_decode_b1": (g["opt66b_decode"], 1),
+        "opt66b_prefill_b4": (g["opt66b_prefill"], 4),
+    }
+
+
+def run():
+    graphs = _graphs()
+    designs = {}
+
+    def opt_for(name):
+        graph, b = graphs[name]
+        return best_homogeneous_design(
+            graph, objective="edp",
+            ga=ga_budget(pop=6, gens=2, fixed_batch=b))
+
+    (_, t_us) = timed(lambda: [designs.update({n: opt_for(n)})
+                               for n in NETWORKS])
+
+    def accel_of(design):
+        """The fixed accelerator an alien network must run on: the SKU,
+        the memory system, and the batching regime chosen for its own
+        network (only the software mapping may adapt)."""
+        st = design.fusion.solution.stages
+        sku = st[0].cfg.chiplet
+        mem = st[0].cfg.memory
+        batch = max(o.cfg.batch for o in st)
+        return sku, mem, batch
+
+    import repro.core.fusion as F
+    from repro.core.convexhull import default_latency_grid, solve_pipeline
+    from repro.core import costmodel
+    from repro.core.perfmodel import enumerate_stage_options, scale_option
+
+    def run_on(graph, b_row, sku, mem, batch):
+        """Evaluate `graph` on the fixed accelerator (SKU+mem+batch)."""
+        b_eff = b_row if b_row is not None else batch
+        seed = F._roofline_seed(graph, [sku], fuse=True)
+        groups = F.groups_from_genome(graph, seed)
+        opts = []
+        for gr in groups:
+            raw = enumerate_stage_options(gr.ops, [sku], memories=(mem,),
+                                          fixed_batch=b_eff, tps=(1, 2),
+                                          name=gr.name)
+            opts.append([scale_option(o, gr.repeat)
+                         for o in costmodel.price_stage_options(raw)])
+        grid = default_latency_grid(opts)
+        return solve_pipeline(opts, grid, objective="edp",
+                              n_stages=sum(g.repeat for g in groups))
+
+    rows = []
+    e_pen, edp_pen = [], []
+    for row in NETWORKS:
+        graph, b = graphs[row]
+        own = run_on(graph, b, *accel_of(designs[row]))
+        for col in NETWORKS:
+            sol = run_on(graph, b, *accel_of(designs[col]))
+            m, mo = sol.metrics(), own.metrics()
+            e_ratio = m["energy"] / mo["energy"]
+            edp_ratio = m["edp"] / mo["edp"]
+            if row != col:
+                e_pen.append(max(e_ratio, 1.0))
+                edp_pen.append(max(edp_ratio, 1.0))
+            rows.append((f"table1.{row}@{col}", t_us / 25,
+                         f"energy_ratio={fmt(e_ratio)}"
+                         f" edp_ratio={fmt(edp_ratio)}"))
+    import statistics
+    rows.append(("table1.summary", t_us,
+                 f"mean_offdiag_energy_penalty="
+                 f"{fmt(statistics.mean(e_pen))}x"
+                 f" max_offdiag_edp_penalty={fmt(max(edp_pen))}x"
+                 f" (paper: up to 41x EDP degradation cross-network)"))
+    return rows

@@ -1,0 +1,55 @@
+"""Quickstart: run the Mozart codesign stack on one network and deploy
+the result as an execution policy.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import operators
+from repro.core.chiplets import default_pool
+from repro.core.codesign import design_for_network
+from repro.core.costmodel import system_cost
+from repro.core.fusion import GAConfig, Requirement
+from repro.core.policy import policy_from_design
+
+
+def main() -> None:
+    # 1. lower a network to Mozart's operator IR (OPT-1.3B decode here)
+    graph = operators.lm_operator_graph(
+        operators.OPT_1_3B, seq=2048, phase="decode", cache_len=2048)
+    print(f"network: {graph.network}  "
+          f"ops={len(graph.operators)} (x repeats)  "
+          f"GFLOPs/token={graph.total_flops / 1e9:.1f}")
+
+    # 2. layers 2-4: GA fusion + iso-latency convex hull + place&route,
+    #    under a 150 ms TPOT requirement, cost-aware objective
+    design = design_for_network(
+        graph, default_pool(), objective="energy_cost",
+        req=Requirement(tpot=0.15),
+        ga=GAConfig(population=8, generations=5))
+    sol = design.fusion.solution
+    print(f"\nBASIC: E/token={sol.energy_per_sample * 1e3:.3f} mJ  "
+          f"TPOT={sol.delay_e2e * 1e3:.2f} ms  "
+          f"throughput={sol.throughput:.0f} tok/s  hw=${sol.hw_cost_usd:.0f}")
+    print(f"P&R: {design.pnr.width:.1f}x{design.pnr.height:.1f} mm "
+          f"(feasible={design.pnr.feasible}, "
+          f"wire={design.pnr.wirelength_mm:.0f} mm)")
+    cost = system_cost(sol.stages, volume=1e6,
+                       n_networks_sharing={
+                           o.cfg.chiplet.label: 200 for o in sol.stages})
+    print(f"unit cost: die=${cost.die:.0f} pkg=${cost.packaging:.0f} "
+          f"nre/unit=${cost.nre_per_unit:.2f}")
+
+    # 3. the solution as stage assignments
+    print("\nstage plan (operator-level heterogeneity):")
+    for st in sol.stages:
+        print(f"  {st.group_name[:44]:44s} -> {st.cfg.label} "
+              f"(x{st.repeat})")
+
+    # 4. deploy: execution policy for the JAX substrate
+    pol = policy_from_design(design)
+    print("\nexecution policy:", pol.fusion_flags(),
+          f"attn_batch={pol.batch_agnostic_batch}",
+          f"mlp_batch={pol.batch_sensitive_batch}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpointing: atomic writes, keep-latest-K, exact
+resume, and ELASTIC re-sharding (a checkpoint saved on mesh A restores
+onto mesh B — checkpoints store fully-replicated numpy leaves plus the
+tree structure, and placement is re-derived from the target mesh's
+sharding rules at restore time).
+
+Layout (one directory per step):
+    <dir>/step_000042.tmp/...   -> atomically renamed to step_000042/
+        index.msgpack           tree structure + dtypes + shapes + meta
+        arr_000000.npy ...      one file per leaf
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import struct
+from typing import Any
+
+import jax
+import numpy as np
+
+try:
+    import msgpack
+    _HAVE_MSGPACK = True
+except Exception:
+    _HAVE_MSGPACK = False
+
+Params = Any
+
+
+def _tree_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------
+    def save(self, step: int, tree: Params, meta: dict | None = None) -> str:
+        name = f"step_{step:09d}"
+        tmp = os.path.join(self.directory, name + ".tmp")
+        final = os.path.join(self.directory, name)
+        if os.path.exists(final):      # idempotent: step already published
+            return final
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves = _tree_paths(tree)
+        index = {"step": step, "meta": meta or {}, "leaves": []}
+        for i, (path, leaf) in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            fn = f"arr_{i:06d}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            index["leaves"].append({"path": path, "file": fn,
+                                    "dtype": str(arr.dtype),
+                                    "shape": list(arr.shape)})
+        blob = (msgpack.packb(index) if _HAVE_MSGPACK
+                else json.dumps(index).encode())
+        with open(os.path.join(tmp, "index.msgpack"), "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, final)                      # atomic publish
+        self._gc()
+        return final
+
+    # -- restore ----------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template: Params, step: int | None = None,
+                shardings: Params | None = None) -> tuple[Params, dict]:
+        """Restore into the structure of `template`.  If `shardings` is
+        given (a pytree of NamedSharding matching template), leaves are
+        device_put with those shardings — this is the elastic-reshard
+        path: the target mesh may differ from the save-time mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(d, "index.msgpack"), "rb") as f:
+            blob = f.read()
+        index = (msgpack.unpackb(blob) if _HAVE_MSGPACK
+                 else json.loads(blob.decode()))
+        by_path = {e["path"]: e for e in index["leaves"]}
+        tpl = _tree_paths(template)
+        shard_leaves = _tree_paths(shardings)[:] if shardings is not None \
+            else None
+        out_leaves = []
+        for i, (path, leaf) in enumerate(tpl):
+            e = by_path.get(path)
+            if e is None:
+                raise KeyError(f"checkpoint missing leaf {path}")
+            arr = np.load(os.path.join(d, e["file"]))
+            want = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"shape mismatch for {path}: ckpt {arr.shape} vs "
+                    f"template {want}")
+            if shard_leaves is not None:
+                arr = jax.device_put(arr, shard_leaves[i][1])
+            out_leaves.append(arr)
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(treedef, out_leaves), \
+            index["meta"]
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)

@@ -1,0 +1,128 @@
+"""The Mozart hierarchical codesign driver (paper Fig. 5).
+
+Layer 1 (pool.anneal_pool)      — SA over chiplet pool composition
+Layer 2 (fusion.optimize_fusion)— GA over tensor fusion + memory allocation
+Layer 3 (convexhull.solve_pipeline) — iso-latency + modified convex hull
+Layer 4 (pnr.place_and_route)   — physical feasibility + footprint
+
+`design_for_network` runs Layers 2–4 for one network on a fixed pool;
+`run_codesign` runs the whole stack and returns the ecosystem + BASICs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .chiplets import Chiplet, default_pool, full_design_space
+from .fusion import (FusionResult, GAConfig, Requirement, optimize_fusion)
+from .operators import OperatorGraph
+from .pnr import PnrResult, place_and_route
+from .pool import PoolResult, SAConfig, anneal_pool, evaluate_pool
+
+
+@dataclasses.dataclass
+class BasicDesign:
+    """A composed BASIC: fusion plan + stage configs + physical layout."""
+    network: str
+    fusion: FusionResult
+    pnr: PnrResult
+
+    @property
+    def metrics(self) -> dict[str, float]:
+        m = self.fusion.solution.metrics()
+        m["pnr_area_mm2"] = self.pnr.area_mm2
+        m["pnr_feasible"] = float(self.pnr.feasible)
+        return m
+
+
+@dataclasses.dataclass
+class CodesignResult:
+    pool: list[Chiplet]
+    designs: dict[str, BasicDesign]
+    objective: str
+
+    def pool_labels(self) -> list[str]:
+        return [c.label for c in self.pool]
+
+    def chiplet_reuse(self) -> dict[str, int]:
+        """How many BASIC designs use each pool chiplet (NRE amortization)."""
+        reuse: dict[str, int] = {}
+        for d in self.designs.values():
+            used = {o.cfg.chiplet.label for o in d.fusion.solution.stages}
+            for u in used:
+                reuse[u] = reuse.get(u, 0) + 1
+        return reuse
+
+
+def design_for_network(graph: OperatorGraph,
+                       pool: Sequence[Chiplet],
+                       objective: str = "energy",
+                       req: Requirement = Requirement(),
+                       ga: GAConfig = GAConfig()) -> BasicDesign | None:
+    """Layers 2-4 for one network on a fixed chiplet pool."""
+    fr = optimize_fusion(graph, pool, objective=objective, req=req, cfg=ga)
+    if fr is None:
+        return None
+    pnr = place_and_route(fr.solution.stages)
+    return BasicDesign(network=graph.network, fusion=fr, pnr=pnr)
+
+
+def run_codesign(networks: dict[str, OperatorGraph],
+                 objective: str = "energy",
+                 pool_size: int = 8,
+                 reqs: dict[str, Requirement] | None = None,
+                 sa: SAConfig = SAConfig(),
+                 final_ga: GAConfig = GAConfig()) -> CodesignResult:
+    """The full four-layer Mozart flow."""
+    pr: PoolResult = anneal_pool(networks, objective=objective,
+                                 pool_size=pool_size, reqs=reqs, cfg=sa,
+                                 final_ga=final_ga)
+    designs: dict[str, BasicDesign] = {}
+    reqs = reqs or {}
+    for name, graph in networks.items():
+        d = design_for_network(graph, pr.pool, objective=objective,
+                               req=reqs.get(name, Requirement()),
+                               ga=final_ga)
+        if d is not None:
+            designs[name] = d
+    return CodesignResult(pool=pr.pool, designs=designs, objective=objective)
+
+
+def unconstrained_design(graph: OperatorGraph,
+                         objective: str = "energy",
+                         req: Requirement = Requirement(),
+                         ga: GAConfig = GAConfig()) -> BasicDesign | None:
+    """Upper bound: unlimited chiplet variety (paper's 'Heterogeneous
+    BASIC (unconstrained)') — the whole 96-point design space as the pool."""
+    return design_for_network(graph, full_design_space(), objective=objective,
+                              req=req, ga=ga)
+
+
+def homogeneous_design(graph: OperatorGraph,
+                       chiplet: Chiplet,
+                       objective: str = "energy",
+                       req: Requirement = Requirement(),
+                       ga: GAConfig | None = None) -> BasicDesign | None:
+    """Baseline: a single chiplet SKU for every stage (paper's
+    'Homogeneous BASIC' / 'Homogeneous ASIC' paradigms)."""
+    ga = ga or GAConfig()
+    return design_for_network(graph, [chiplet], objective=objective,
+                              req=req, ga=ga)
+
+
+def best_homogeneous_design(graph: OperatorGraph,
+                            candidates: Sequence[Chiplet] | None = None,
+                            objective: str = "energy",
+                            req: Requirement = Requirement(),
+                            ga: GAConfig | None = None) -> BasicDesign | None:
+    """The best single-SKU accelerator — the fair homogeneous baseline."""
+    ga = ga or GAConfig(population=6, generations=3)
+    cands = list(candidates) if candidates is not None else default_pool()
+    best: BasicDesign | None = None
+    for c in cands:
+        d = homogeneous_design(graph, c, objective=objective, req=req, ga=ga)
+        if d is None:
+            continue
+        if best is None or d.fusion.value < best.fusion.value:
+            best = d
+    return best

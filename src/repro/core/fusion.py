@@ -1,0 +1,234 @@
+"""Layer 2: evolutionary search over tensor-fusion grouping + memory
+allocation (paper §4.2).
+
+Genome, over the *compressed* operator pipeline (repeated layers share a
+template — the paper's "representative regions"):
+
+  * boundaries[i] in {0,1}  — cut between op i and i+1 (1 = stage break);
+    cuts are forced where adjacent ops have different repeat counts.
+  * mem_gene[i] in MEMORY_POOL — the memory type of the group whose first
+    op is i (genes of non-leading ops are silent but inherited by
+    crossover, preserving high-quality fusion groups, §4.2).
+
+Fitness is the Layer-3 iso-latency/convex-hull solve (convexhull.py) on
+the fusion's stage options.  The initial population is roofline-seeded
+(Insight 1: memory-bound groups get fast memory, compute-bound groups get
+cheap memory) and encodes Alwani-style early-layer fusion patterns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import random
+from typing import Sequence
+
+from . import costmodel
+from .chiplets import Chiplet
+from .convexhull import (PipelineSolution, default_latency_grid,
+                         solve_pipeline)
+from .memory import DDR5, HBM3, MEMORY_POOL, MemoryType
+from .operators import Operator, OperatorGraph
+from .perfmodel import (BATCH_OPTIONS, StageOption, enumerate_stage_options,
+                        is_memory_bound, scale_option)
+
+
+@dataclasses.dataclass(frozen=True)
+class Requirement:
+    """Latency requirements (paper Table 5). Seconds; None = unconstrained.
+    ttft/tpot/e2e all constrain the end-to-end pipeline traversal P*T."""
+    ttft: float | None = None
+    tpot: float | None = None
+    e2e: float | None = None
+
+    @property
+    def max_e2e(self) -> float | None:
+        vals = [v for v in (self.ttft, self.tpot, self.e2e) if v is not None]
+        return min(vals) if vals else None
+
+
+@dataclasses.dataclass(frozen=True)
+class Genome:
+    boundaries: tuple[int, ...]   # len N-1
+    mem_genes: tuple[int, ...]    # len N, index into MEMORY_POOL
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionGroup:
+    ops: tuple[Operator, ...]
+    repeat: int
+    memory: MemoryType
+    name: str
+
+
+@dataclasses.dataclass
+class FusionResult:
+    genome: Genome
+    groups: list[FusionGroup]
+    solution: PipelineSolution
+    value: float
+
+
+@dataclasses.dataclass
+class GAConfig:
+    population: int = 10          # paper Table 4
+    generations: int = 10
+    mutation_rate: float = 0.2
+    crossover_rate: float = 0.8
+    seed: int = 0
+    latency_points: int = 48
+    fixed_batch: int | None = None
+    batches: tuple[int, ...] = BATCH_OPTIONS
+
+
+def forced_boundaries(graph: OperatorGraph) -> tuple[int, ...]:
+    """Cuts that every genome must contain (repeat-count changes)."""
+    r = graph.repeats
+    return tuple(1 if r[i] != r[i + 1] else 0 for i in range(len(r) - 1))
+
+
+def groups_from_genome(graph: OperatorGraph, g: Genome) -> list[FusionGroup]:
+    ops, reps = graph.operators, graph.repeats
+    forced = forced_boundaries(graph)
+    groups: list[FusionGroup] = []
+    start = 0
+    for i in range(len(ops)):
+        last = i == len(ops) - 1
+        cut = last or g.boundaries[i] or forced[i]
+        if cut:
+            seg = ops[start:i + 1]
+            mem = MEMORY_POOL[g.mem_genes[start] % len(MEMORY_POOL)]
+            groups.append(FusionGroup(
+                ops=tuple(seg), repeat=reps[start],
+                memory=mem, name="+".join(o.name for o in seg)))
+            start = i + 1
+    return groups
+
+
+@functools.lru_cache(maxsize=200_000)
+def _group_options_cached(ops: tuple[Operator, ...], repeat: int,
+                          pool: tuple[Chiplet, ...], memory: MemoryType,
+                          fixed_batch: int | None,
+                          batches: tuple[int, ...],
+                          name: str) -> tuple[StageOption, ...]:
+    raw = enumerate_stage_options(ops, pool, memories=(memory,),
+                                  batches=batches, name=name,
+                                  fixed_batch=fixed_batch)
+    priced = costmodel.price_stage_options(raw)
+    return tuple(scale_option(o, repeat) for o in priced)
+
+
+def stage_options_for_groups(groups: Sequence[FusionGroup],
+                             pool: Sequence[Chiplet],
+                             cfg: GAConfig) -> list[list[StageOption]]:
+    return [list(_group_options_cached(g.ops, g.repeat, tuple(pool),
+                                       g.memory, cfg.fixed_batch,
+                                       tuple(cfg.batches), g.name))
+            for g in groups]
+
+
+def evaluate_genome(graph: OperatorGraph, genome: Genome,
+                    pool: Sequence[Chiplet], objective: str,
+                    req: Requirement, cfg: GAConfig
+                    ) -> FusionResult | None:
+    groups = groups_from_genome(graph, genome)
+    options = stage_options_for_groups(groups, pool, cfg)
+    if any(not o for o in options):
+        return None
+    grid = default_latency_grid(options, n=cfg.latency_points)
+    n_stages = sum(g.repeat for g in groups)
+    sol = solve_pipeline(options, grid, objective=objective,
+                         max_e2e=req.max_e2e, n_stages=n_stages)
+    if sol is None:
+        return None
+    return FusionResult(genome=genome, groups=groups, solution=sol,
+                        value=sol.value)
+
+
+# --- seeding ----------------------------------------------------------------
+
+def _roofline_seed(graph: OperatorGraph, pool: Sequence[Chiplet],
+                   fuse: bool) -> Genome:
+    """Insight-1 seed: group while intermediates fit the biggest GLB; give
+    memory-bound groups HBM, compute-bound groups DDR5."""
+    ops, reps = graph.operators, graph.repeats
+    forced = forced_boundaries(graph)
+    glb = max(c.glb_bytes for c in pool) / 2
+    ref_chiplet = sorted(pool, key=lambda c: c.n_pes)[len(pool) // 2]
+    bounds = []
+    for i in range(len(ops) - 1):
+        if not fuse:
+            bounds.append(1)
+        else:
+            spill = ops[i].act_out_bytes > glb
+            bounds.append(1 if (forced[i] or spill) else 0)
+    hbm_i = MEMORY_POOL.index(HBM3)
+    ddr_i = MEMORY_POOL.index(DDR5)
+    genes = [hbm_i if is_memory_bound(o, ref_chiplet, HBM3) else ddr_i
+             for o in ops]
+    return Genome(boundaries=tuple(bounds), mem_genes=tuple(genes))
+
+
+def _mutate(g: Genome, rng: random.Random, rate: float) -> Genome:
+    b = list(g.boundaries)
+    m = list(g.mem_genes)
+    for i in range(len(b)):
+        if rng.random() < rate:
+            b[i] ^= 1
+    for i in range(len(m)):
+        if rng.random() < rate:
+            m[i] = rng.randrange(len(MEMORY_POOL))
+    return Genome(tuple(b), tuple(m))
+
+
+def _crossover(a: Genome, b: Genome, rng: random.Random) -> Genome:
+    """Single-point crossover preserving contiguous fusion groups (§4.2)."""
+    if len(a.boundaries) == 0:
+        return a
+    cut = rng.randrange(len(a.boundaries) + 1)
+    return Genome(a.boundaries[:cut] + b.boundaries[cut:],
+                  a.mem_genes[:cut + 1] + b.mem_genes[cut + 1:])
+
+
+def optimize_fusion(graph: OperatorGraph, pool: Sequence[Chiplet],
+                    objective: str = "energy",
+                    req: Requirement = Requirement(),
+                    cfg: GAConfig = GAConfig()) -> FusionResult | None:
+    """The full Layer-2 GA.  Returns the best feasible FusionResult."""
+    rng = random.Random(cfg.seed)
+    n = len(graph.operators)
+
+    seeds = [_roofline_seed(graph, pool, fuse=True),
+             _roofline_seed(graph, pool, fuse=False)]
+    pop: list[Genome] = list(seeds)
+    while len(pop) < cfg.population:
+        pop.append(_mutate(seeds[0], rng, 0.3))
+
+    cache: dict[Genome, FusionResult | None] = {}
+
+    def fit(g: Genome) -> float:
+        if g not in cache:
+            cache[g] = evaluate_genome(graph, g, pool, objective, req, cfg)
+        r = cache[g]
+        return math.inf if r is None else r.value
+
+    for _ in range(cfg.generations):
+        scored = sorted(pop, key=fit)
+        elite = scored[: max(2, cfg.population // 5)]
+        nxt = list(elite)
+        while len(nxt) < cfg.population:
+            if rng.random() < cfg.crossover_rate and len(scored) >= 2:
+                child = _crossover(rng.choice(scored[:5]),
+                                   rng.choice(scored[:5]), rng)
+            else:
+                child = rng.choice(elite)
+            nxt.append(_mutate(child, rng, cfg.mutation_rate))
+        pop = nxt
+
+    best = min(pop, key=fit)
+    res = cache.get(best)
+    if res is None:
+        for g in sorted(cache, key=fit):
+            if cache[g] is not None:
+                return cache[g]
+    return res

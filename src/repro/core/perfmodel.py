@@ -1,0 +1,215 @@
+"""First-order performance & energy model (the Timeloop/Accelergy stand-in).
+
+Evaluates a *fusion group* (a consecutive run of operators mapped to one
+pipeline stage) on a chiplet + memory configuration, producing the
+piecewise-affine energy function of paper §4.3.1:
+
+    E(T) = e_dyn + p_static * T     for T >= t_cmp,   infinite below.
+
+All stage quantities are normalized PER SAMPLE so that stages running
+different batch sizes (Insight 2: non-uniform batching) compose into one
+pipeline with a common per-sample initiation interval T.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+from .chiplets import (Chiplet, E_INTERCHIP_BIT, E_MAC_BASE, E_SRAM_BYTE)
+from .memory import MEMORY_POOL, MemoryType
+from .operators import BATCH_AGNOSTIC, Operator
+
+TP_OPTIONS = (1, 2)                      # paper Table 4
+BATCH_OPTIONS = (1, 2, 4, 8, 16, 32)     # per-stage microbatch choices
+MEM_UNIT_OPTIONS = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageConfig:
+    chiplet: Chiplet
+    memory: MemoryType
+    mem_units: int
+    tp: int
+    batch: int
+
+    @property
+    def label(self) -> str:
+        return (f"{self.chiplet.label}|{self.memory.name}x{self.mem_units}"
+                f"|tp{self.tp}|b{self.batch}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageOption:
+    """One (chiplet, memory, tp, batch) choice for a fusion group, reduced
+    to the piecewise-affine energy form. Per-sample units."""
+    t_cmp: float          # min achievable per-sample latency (s)
+    e_dyn: float          # dynamic energy per sample (J)
+    p_static: float       # leakage power while stage is alive (W)
+    hw_cost_usd: float    # manufacturing cost of this stage's hardware
+    cfg: StageConfig
+    group_name: str = ""
+    flops_per_sample: float = 0.0   # useful FLOPs (utilization metrics)
+    repeat: int = 1                 # physical copies of this stage
+
+    def energy_at(self, t: float) -> float:
+        if t < self.t_cmp:
+            return math.inf
+        return self.e_dyn + self.p_static * t
+
+
+def _group_dram_bytes(ops: Sequence[Operator], glb_bytes: int,
+                      batch: int) -> tuple[float, float]:
+    """(dram_bytes, sram_bytes) for one batch-pass of the fused group.
+
+    Tensor fusion keeps inter-operator intermediates in the GLB when they
+    fit (half the GLB — the other half is the double buffer); spilled
+    intermediates cost a DRAM write + read.
+    """
+    dram = 0.0
+    sram = 0.0
+    usable = glb_bytes / 2
+    for i, op in enumerate(ops):
+        w = op.weight_bytes
+        if op.weight_reuse_divisor > 1.0:   # MoE: touched experts only
+            w = min(op.weight_bytes,
+                    (op.weight_bytes / op.weight_reuse_divisor) * batch)
+        dram += w
+        a_in = op.act_in_bytes * batch
+        a_out = op.act_out_bytes * batch
+        if i == 0:
+            dram += a_in
+        elif ops[i - 1].act_out_bytes * batch > usable:
+            dram += a_in                     # re-read the spill
+        if i == len(ops) - 1:
+            dram += a_out
+        elif a_out > usable:
+            dram += a_out                    # spill write
+        sram += (a_in + a_out)
+    return dram, sram
+
+
+def evaluate_group(ops: Sequence[Operator], cfg: StageConfig,
+                   name: str = "") -> StageOption:
+    """Roofline latency + energy for a fusion group on one stage config."""
+    c, mem, B, tp = cfg.chiplet, cfg.memory, cfg.batch, cfg.tp
+
+    t_compute = 0.0
+    e_mac = 0.0
+    sram_traffic = 0.0
+    for op in ops:
+        util = c.utilization(op.kind)
+        # Small operators cannot fill a big array (Insight 4 / decode GEMV).
+        size_eff = min(1.0, (op.parallel_work * B) / (c.n_pes * tp))
+        rate = c.peak_flops * util * size_eff * tp
+        t_compute += (op.flops * B) / max(rate, 1.0)
+        e_mac += op.flops * B * 0.5 * E_MAC_BASE
+        sram_traffic += ((op.act_in_bytes + op.act_out_bytes) * B
+                         * c.sram_traffic_factor(op.kind))
+
+    dram_bytes, _ = _group_dram_bytes(ops, c.glb_bytes * tp, B)
+    bw = mem.bw_per_unit * cfg.mem_units
+    t_mem = dram_bytes / bw
+
+    # Tensor-parallel activation exchange (partial-sum/act reduce per op) +
+    # handoff of the stage output to the next stage over the package link.
+    out_bytes = ops[-1].act_out_bytes * B
+    tp_bytes = sum(o.act_out_bytes for o in ops) * B * (tp - 1)
+    t_comm = (tp_bytes + out_bytes) / c.interchip_bw
+    e_link = (tp_bytes + out_bytes) * 8.0 * E_INTERCHIP_BIT
+
+    # Double-buffered pipeline: compute overlaps DMA (Fig. 4 template).
+    t_batch = max(t_compute, t_mem) + t_comm
+    e_dyn = (e_mac + sram_traffic * E_SRAM_BYTE + mem.energy_j(dram_bytes)
+             + e_link)
+    return StageOption(
+        t_cmp=t_batch / B,
+        e_dyn=e_dyn / B,
+        p_static=c.static_power_w * tp,
+        hw_cost_usd=0.0,          # filled by costmodel.price_stage_options
+        cfg=cfg,
+        group_name=name,
+        flops_per_sample=sum(o.flops for o in ops),
+    )
+
+
+def scale_option(o: StageOption, repeat: int) -> StageOption:
+    """A fusion group repeated `repeat` times (e.g. one per transformer
+    layer) contributes `repeat` physical pipeline stages that share one
+    configuration: energy/cost/leakage scale, per-stage latency doesn't."""
+    if repeat == 1:
+        return o
+    return dataclasses.replace(
+        o, e_dyn=o.e_dyn * repeat, p_static=o.p_static * repeat,
+        hw_cost_usd=o.hw_cost_usd * repeat,
+        flops_per_sample=o.flops_per_sample * repeat, repeat=repeat)
+
+
+def enumerate_stage_options(
+        ops: Sequence[Operator],
+        pool: Sequence[Chiplet],
+        memories: Sequence[MemoryType] = MEMORY_POOL,
+        batches: Sequence[int] = BATCH_OPTIONS,
+        tps: Sequence[int] = TP_OPTIONS,
+        name: str = "",
+        fixed_batch: int | None = None,
+        max_mem_units: int = 8) -> list[StageOption]:
+    """All StageOptions for a fusion group: the `M` of Algorithm 1."""
+    capacity = sum(o.weight_bytes for o in ops) + \
+        max((o.act_in_bytes + o.act_out_bytes) for o in ops)
+    out: list[StageOption] = []
+    bs = (fixed_batch,) if fixed_batch is not None else tuple(batches)
+    for c in pool:
+        for m in memories:
+            min_units = m.units_for(capacity, 0)
+            if min_units > max_mem_units:
+                continue
+            for units in sorted({min_units, min(min_units * 2, max_mem_units),
+                                 max_mem_units}):
+                for tp in tps:
+                    for b in bs:
+                        cfg = StageConfig(chiplet=c, memory=m,
+                                          mem_units=units, tp=tp, batch=b)
+                        out.append(evaluate_group(ops, cfg, name=name))
+    return out
+
+
+def is_memory_bound(op: Operator, chiplet: Chiplet, mem: MemoryType,
+                    batch: int = 1) -> bool:
+    """Insight 1 classifier: does this operator saturate bandwidth before
+    compute on the given hardware?"""
+    util = chiplet.utilization(op.kind)
+    size_eff = min(1.0, op.parallel_work * batch / chiplet.n_pes)
+    t_c = op.flops * batch / max(chiplet.peak_flops * util * size_eff, 1.0)
+    t_m = op.dram_bytes(batch) / mem.bw_per_unit
+    return t_m > t_c
+
+
+# ---------------------------------------------------------------------------
+# GPU baseline (paper §5) — MODELED, not measured: no A100 in this
+# environment.  Parameters documented; benchmarks flag this column
+# "modeled".
+# ---------------------------------------------------------------------------
+
+GPU_PEAK_FLOPS = 312e12        # A100 bf16 dense
+GPU_HBM_BW = 1.555e12          # bytes/s
+GPU_TDP_W = 400.0
+GPU_IDLE_W = 45.0              # measured idle power cited in paper §5
+GPU_COST_USD = 10_000.0        # the paper's optimistic A100 price
+GPU_KERNEL_OVERHEAD_S = 4e-6   # per-kernel launch (CUDA-graph amortized)
+GPU_UTIL = {"gemm": 0.45, "conv": 0.35, "dwconv": 0.06, "attention": 0.30,
+            "elementwise": 0.04, "norm": 0.04, "scan": 0.05, "embed": 0.10}
+
+
+def gpu_eval(ops: Iterable[Operator], repeats: Iterable[int],
+             batch: int = 1) -> tuple[float, float]:
+    """(latency_s, energy_J) per batch on the modeled GPU."""
+    t_total = 0.0
+    for op, r in zip(ops, repeats):
+        util = GPU_UTIL[op.kind]
+        size_eff = min(1.0, op.parallel_work * batch / (GPU_PEAK_FLOPS / 2e9))
+        t_c = op.flops * batch / (GPU_PEAK_FLOPS * util * max(size_eff, 1e-3))
+        t_m = op.dram_bytes(batch) / GPU_HBM_BW
+        t_total += (max(t_c, t_m) + GPU_KERNEL_OVERHEAD_S) * r
+    energy = GPU_TDP_W * t_total
+    return t_total, energy

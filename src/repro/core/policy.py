@@ -1,0 +1,80 @@
+"""Mozart solution -> execution policy for the JAX substrate.
+
+The paper deploys its decisions as silicon; this framework additionally
+deploys them as *execution policies* on the TPU substrate (DESIGN.md §2):
+
+  * per-operator-class batch size (Insight 2's non-uniform batching) drives
+    the serving engine's microbatch scheduler;
+  * tensor-parallel degree per stage drives sharding choices;
+  * fusion groups map onto the fused Pallas kernels (flash-attention etc.).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from .codesign import BasicDesign
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorPolicy:
+    group: str
+    batch: int
+    tp: int
+    memory: str
+    chiplet: str
+    fused: bool           # >1 operator in the group -> fused kernel
+
+
+@dataclasses.dataclass
+class ExecutionPolicy:
+    network: str
+    interval_s: float                 # target per-sample initiation interval
+    operators: list[OperatorPolicy]
+
+    @property
+    def batch_agnostic_batch(self) -> int:
+        bs = [p.batch for p in self.operators
+              if "attention" in p.group or "scan" in p.group]
+        return min(bs) if bs else 1
+
+    @property
+    def batch_sensitive_batch(self) -> int:
+        bs = [p.batch for p in self.operators
+              if "attention" not in p.group and "scan" not in p.group]
+        return max(bs) if bs else 1
+
+    def fusion_flags(self) -> dict[str, bool]:
+        """Which fused kernels the substrate should enable."""
+        flags = {"flash_attention": False, "fused_mlp": False,
+                 "fused_norm": False}
+        for p in self.operators:
+            if not p.fused:
+                continue
+            if "attention" in p.group:
+                flags["flash_attention"] = True
+            if "mlp" in p.group:
+                flags["fused_mlp"] = True
+            if "norm" in p.group:
+                flags["fused_norm"] = True
+        return flags
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "network": self.network,
+            "interval_s": self.interval_s,
+            "operators": [dataclasses.asdict(p) for p in self.operators],
+            "fusion": self.fusion_flags(),
+        }, indent=2)
+
+
+def policy_from_design(design: BasicDesign) -> ExecutionPolicy:
+    ops = []
+    for st in design.fusion.solution.stages:
+        ops.append(OperatorPolicy(
+            group=st.group_name, batch=st.cfg.batch, tp=st.cfg.tp,
+            memory=st.cfg.memory.name, chiplet=st.cfg.chiplet.label,
+            fused="+" in st.group_name))
+    return ExecutionPolicy(network=design.network,
+                           interval_s=design.fusion.solution.T,
+                           operators=ops)

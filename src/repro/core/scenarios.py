@@ -1,0 +1,55 @@
+"""Deployment scenarios & constraints (paper §6.2, Tables 2 and 5).
+
+Constraint-aware system-level optimization: each scenario fixes latency
+requirements and the metric of record, and the codesign layers search
+within them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .fusion import Requirement
+
+# Paper Table 5 — latency requirements of workloads.
+CHATBOT = Requirement(ttft=2.5, tpot=0.15)
+SUMMARIZATION = Requirement(ttft=15.0, tpot=0.15)
+AV_FAST = Requirement(e2e=0.010)       # 10 ms DET deadline
+AV_REALTIME = Requirement(e2e=0.033)   # 33 ms / 30 FPS
+
+# Speculative decoding (paper §6.2.1): OPT-66B target + OPT-1.3B draft,
+# token acceptance rate 5.6 with k >= 5, realized speedup capped at 2x.
+SPECDEC_TAR = 5.6
+SPECDEC_K = 5
+SPECDEC_SPEEDUP_CAP = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    metric: str                    # objective for the codesign search
+    requirement: Requirement
+    description: str = ""
+
+
+DATACENTER_CHATBOT = Scenario("chatbot", "energy_cost", CHATBOT,
+                              "OPT-66B interactive serving")
+DATACENTER_SUMMARIZATION = Scenario("summarization", "energy_cost",
+                                    SUMMARIZATION, "OPT-66B summarization")
+AUTONOMOUS_VEHICLE_10MS = Scenario("av_10ms", "energy_cost", AV_FAST,
+                                   "perception backbone, 10 ms DET")
+AUTONOMOUS_VEHICLE_33MS = Scenario("av_33ms", "energy_cost", AV_REALTIME,
+                                   "perception backbone, 33 ms DET")
+
+
+def spec_decode_step_latency(t_draft_token: float, t_verify_batch: float,
+                             k: int = SPECDEC_K) -> float:
+    """One speculative iteration: draft k tokens serially, verify batched."""
+    return k * t_draft_token + t_verify_batch
+
+
+def spec_decode_throughput(t_draft_token: float, t_verify_batch: float,
+                           tar: float = SPECDEC_TAR,
+                           k: int = SPECDEC_K) -> float:
+    """Accepted tokens/s: TAR tokens land per iteration on average."""
+    t_iter = spec_decode_step_latency(t_draft_token, t_verify_batch, k)
+    return min(tar, k + 1) / t_iter

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the perf-critical compute layers, each with a
+# pl.pallas_call + BlockSpec kernel, a jit'd ops.py wrapper, and a
+# pure-jnp ref.py oracle (validated in interpret mode on CPU):
+#   flash_attention/ — fused QK^T-softmax-PV (tensor fusion, GQA, SWA)
+#   rglru_scan/      — RG-LRU diagonal linear recurrence
+#   wkv6/            — RWKV6 chunked WKV recurrence
+#   moe_mlp/         — fused grouped expert-MLP (grouped GEMM + activation)
+from . import flash_attention, moe_mlp, rglru_scan, wkv6

@@ -1,0 +1,42 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+Model-layout API: q (B, Sq, H, hd), k/v (B, Sk, Hkv, hd) — reshaped to the
+kernel's (B*H, S, hd) layout.  On non-TPU backends this falls back to
+interpret mode (the kernel body runs in Python on CPU) so the SAME code
+path is exercised everywhere; on TPU it compiles via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, hd)
+    # (B*H) layout must group query heads of one kv head contiguously:
+    # reorder q so head-major grouping matches kv: index = b*H + h where
+    # heads h in [g*group, (g+1)*group) share kv head g.  transpose above
+    # already yields exactly that layout.
+    it = (not _on_tpu()) if interpret is None else interpret
+    of = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                              bq=bq, bk=bk, interpret=it)
+    return of.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None) -> jnp.ndarray:
+    """q: (BH, Sq, hd); k/v: (BHkv, Sk, hd). GQA via head-group repeat."""
+    bh, sq, hd = q.shape
+    bh_kv, sk, _ = k.shape
+    group = bh // bh_kv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=0)
+        v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)

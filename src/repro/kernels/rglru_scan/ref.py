@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t; a/b: (B,S,W), h0: (B,W) -> (B,S,W)."""
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0))
+    _, h = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(h, 0, 1).astype(a.dtype)

@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the WKV6 kernel with CPU interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import wkv6_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, logw, u, s0, *, chunk: int = 64,
+         interpret: bool | None = None):
+    it = (jax.default_backend() != "tpu") if interpret is None else interpret
+    return wkv6_pallas(r, k, v, logw, u, s0, chunk=chunk, interpret=it)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the WKV6 kernel (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u, s0):
+    """r/k/v/logw: (BH, S, D); u: (BH, 1, D); s0: (BH, D, Dv).
+    Returns (o, s_final)."""
+    w = jnp.exp(logw)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                       # (BH, D)
+        kv = jnp.einsum("bi,bj->bij", kt, vt)
+        o = jnp.einsum("bi,bij->bj", rt, s + u[:, 0, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s, o = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), s

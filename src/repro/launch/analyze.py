@@ -1,0 +1,165 @@
+"""Roofline analysis from compiled dry-run artifacts (§Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+cost_analysis() and as_text() come from the SPMD-PARTITIONED module, so
+flops / bytes / collective bytes are PER-DEVICE quantities; the roofline
+terms below divide by per-chip peaks, which is algebraically identical to
+the global form  term = global_qty / (chips * peak).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s/link (one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9a-z]+)?)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    bt = _DTYPE_BYTES.get(tok_dtype)
+    if bt is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * bt
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result bytes of every collective op in (per-device) HLO."""
+    out: dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    out["start_done_dedup"] = 0.0
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(.+?)\s+(" + "|".join(COLLECTIVE_OPS)
+                      + r")(-start|-done)?\(", line)
+        if not m:
+            continue
+        result_part, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":        # avoid double counting start/done
+            continue
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(result_part))
+        out[op] += float(nbytes)
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    model_flops_ratio: float          # useful / compiled compute
+    arg_bytes_per_device: float = 0.0
+    temp_bytes_per_device: float = 0.0
+    out_bytes_per_device: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_from_compiled(compiled, model_flops_global: float,
+                           n_devices: int) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    colls = collective_bytes(compiled.as_text())
+    cb = colls["total"]
+    t_c = flops / PEAK_FLOPS
+    t_m = nbytes / HBM_BW
+    t_x = cb / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bott = max(terms, key=terms.get)
+    mf_dev = model_flops_global / max(n_devices, 1)
+    try:
+        ma = compiled.memory_analysis()
+        arg_b = float(ma.argument_size_in_bytes)
+        tmp_b = float(ma.temp_size_in_bytes)
+        out_b = float(ma.output_size_in_bytes)
+    except Exception:
+        arg_b = tmp_b = out_b = 0.0
+    return Roofline(
+        flops_per_device=flops, bytes_per_device=nbytes,
+        collective_bytes_per_device=cb, collectives=colls,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, bottleneck=bott,
+        model_flops=model_flops_global,
+        model_flops_ratio=(mf_dev / flops) if flops else 0.0,
+        arg_bytes_per_device=arg_b, temp_bytes_per_device=tmp_b,
+        out_bytes_per_device=out_b)
+
+
+# --- MODEL_FLOPS ------------------------------------------------------------
+
+def matmul_param_counts(params_shape: Any) -> tuple[float, float]:
+    """(total, active) matmul-participating params.  MoE experts count
+    `top_k/n_experts` toward active. Embedding tables excluded, LM head
+    included (it is real matmul compute)."""
+    import jax
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    total = active = 0.0
+    for path, leaf in flat:
+        keys = [getattr(p, "key", getattr(p, "idx", "")) for p in path]
+        name = "/".join(str(k) for k in keys)
+        if getattr(leaf, "ndim", 0) < 2:
+            continue
+        if name.endswith("embed") or "dec_pos" in name:
+            continue
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        total += n
+        active += n          # corrected below for experts
+    return total, active
+
+
+def model_flops_for(cfg, shape, params_shape) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N_active*B (decode, per step),
+    N = matmul params (active for MoE)."""
+    import jax
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    total = 0.0
+    expert_total = 0.0
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", "")))
+                        for p in path)
+        if getattr(leaf, "ndim", 0) < 2 or name.endswith("embed") \
+                or "dec_pos" in name:
+            continue
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "experts_" in name:
+            expert_total += n
+    active = total
+    if cfg.use_moe and cfg.n_experts:
+        active = total - expert_total * (1.0 - cfg.top_k / cfg.n_experts)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * active * shape.global_batch

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks
+# the device count at first init, and the production meshes below need
+# 512 placeholder host devices (single-pod 16x16 uses the first 256).
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh)
+cell with ShapeDtypeStruct inputs — no allocation — then record
+memory_analysis(), cost_analysis(), the collective schedule, and the
+three roofline terms (launch.analyze).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline benchmark and EXPERIMENTS.md tables are generated from them.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_specs, params_specs
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import (cache_shardings, data_shardings,
+                                     optimizer_shardings, params_shardings)
+from repro.training.optimizer import OptimizerConfig, apply_opt, init_opt
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# Per-arch execution policy for the production shapes (the Mozart policy
+# layer feeds this; hillclimb iterations edit it — see EXPERIMENTS.md).
+ARCH_POLICY: dict[str, dict] = {
+    "deepseek-v3-671b": {"fsdp": True, "optimizer": "adafactor"},
+    "qwen2.5-32b": {"fsdp": True},
+    "mixtral-8x7b": {"fsdp": True},
+}
+
+
+def arch_policy(arch: str) -> dict:
+    return {"fsdp": False, "optimizer": "adamw",
+            **ARCH_POLICY.get(arch, {})}
+
+
+def tune_config(cfg: ModelConfig, shape) -> ModelConfig:
+    """Production-shape execution knobs (remat for train, chunked attn)."""
+    kw = {}
+    if shape.kind == "train":
+        kw["remat"] = "dots"
+    if shape.seq_len >= 32768 and cfg.family == "transformer":
+        kw["attn_chunk"] = 2048
+    return cfg.replace(**kw) if kw else cfg
+
+
+def build_step(cfg: ModelConfig, shape, mesh, opt_name: str,
+               fsdp: bool):
+    """Returns (fn, in_specs_tuple, in_shardings_tuple, donate)."""
+    pspec = params_specs(cfg)
+    pshard = params_shardings(mesh, pspec, fsdp=fsdp)
+
+    if shape.kind == "train":
+        ocfg = OptimizerConfig(name=opt_name)
+        ospec = jax.eval_shape(lambda: init_opt(ocfg, pspec))
+        oshard = optimizer_shardings(
+            mesh, pspec, {"inner": ospec}, fsdp=fsdp)["inner"]
+        bspec = batch_specs(cfg, shape)
+        bshard = data_shardings(mesh, bspec)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: api.loss_fn(cfg, p, batch))(params)
+            params, opt_state, gnorm = apply_opt(ocfg, grads, opt_state,
+                                                 params)
+            return params, opt_state, loss, gnorm
+
+        scalar = NamedSharding(mesh, P())
+        return (train_step, (pspec, ospec, bspec),
+                (pshard, oshard, bshard), (0, 1),
+                (pshard, oshard, scalar, scalar))
+
+    if shape.kind == "prefill":
+        bspec = batch_specs(cfg, shape)
+        bshard = data_shardings(mesh, bspec)
+
+        def prefill_step(params, batch):
+            return api.prefill(cfg, params, batch, shape.seq_len)
+
+        return prefill_step, (pspec, bspec), (pshard, bshard), (), None
+
+    # decode / long: serve_step — one token against a deep cache
+    tspec, cspec = decode_specs(cfg, shape)
+    tshard = data_shardings(mesh, {"t": tspec})["t"]
+    cshard = cache_shardings(mesh, cspec, cfg.kv_heads,
+                             shape.global_batch,
+                             seq_shard=cfg.cache_seq_shard)
+
+    def serve_step(params, tokens, cache):
+        return api.decode_step(cfg, params, tokens, cache)
+
+    return serve_step, (pspec, tspec, cspec), (pshard, tshard, cshard), (2,), None
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             save: bool = True, verbose: bool = True,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    shape = configs.SHAPES[shape_name]
+    pol = arch_policy(arch)
+    cfg = tune_config(configs.get_config(arch), shape)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "n_devices": n_dev, "policy": pol, "ok": False,
+              "tag": tag, "overrides": overrides or {}}
+    try:
+        fn, in_specs, in_shards, donate, out_shards = build_step(
+            cfg, shape, mesh, pol["optimizer"], pol["fsdp"])
+        # set_mesh (not just the Mesh context manager) so that
+        # with_sharding_constraint hints inside the model see the
+        # abstract mesh during tracing.
+        jax.set_mesh(mesh)
+        with mesh:
+            jit_kw = {"in_shardings": in_shards,
+                      "donate_argnums": donate}
+            if out_shards is not None:
+                jit_kw["out_shardings"] = out_shards
+            lowered = jax.jit(fn, **jit_kw).lower(*in_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mf = analyze.model_flops_for(cfg, shape, params_specs(cfg))
+        roof = analyze.roofline_from_compiled(compiled, mf, n_dev)
+        record.update(ok=True, lower_s=t_lower, compile_s=t_compile,
+                      roofline=roof.as_dict())
+        try:
+            ma = compiled.memory_analysis()
+            record["memory_analysis"] = {
+                "argument_size_in_bytes": int(ma.argument_size_in_bytes),
+                "output_size_in_bytes": int(ma.output_size_in_bytes),
+                "temp_size_in_bytes": int(ma.temp_size_in_bytes),
+                "alias_size_in_bytes": int(ma.alias_size_in_bytes),
+            }
+        except Exception:
+            record["memory_analysis"] = None
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: OK "
+                  f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+            print(f"  memory_analysis: {record['memory_analysis']}")
+            ca_keys = ("flops_per_device", "bytes_per_device",
+                       "collective_bytes_per_device", "bottleneck",
+                       "model_flops_ratio")
+            print("  cost_analysis:",
+                  {k: record["roofline"][k] for k in ca_keys})
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "
+                  f"FAIL {record['error']}")
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn_out = os.path.join(
+            OUT_DIR, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+        with open(fn_out, "w") as f:
+            json.dump(record, f, indent=2, default=float)
+    return record
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", choices=configs.ARCH_IDS)
+    p.add_argument("--shape", choices=tuple(configs.SHAPES))
+    p.add_argument("--mesh", choices=("single", "multi", "both"),
+                   default="single")
+    p.add_argument("--all", action="store_true",
+                   help="sweep every runnable (arch x shape) cell")
+    p.add_argument("--no-save", action="store_true")
+    p.add_argument("--tag", default="",
+                   help="variant label appended to the artifact name")
+    p.add_argument("--override", nargs="*", default=[],
+                   help="ModelConfig overrides, e.g. gqa_einsum=true")
+    args = p.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.isdigit() else v)
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        cells = configs.cells()
+    else:
+        if not args.arch or not args.shape:
+            p.error("--arch/--shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk, save=not args.no_save,
+                           overrides=overrides, tag=args.tag)
+            n_fail += 0 if rec["ok"] else 1
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run cells FAILED")
+    print("[dryrun] all requested cells compiled successfully")
+
+
+if __name__ == "__main__":
+    main()

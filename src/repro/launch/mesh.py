@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single-pod: 16x16 = 256 chips ("data",
+"model").  Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model") — the
+"pod" axis carries pure data parallelism across pods (DCN-class links),
+"model" carries TP/EP within a pod (ICI).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_axis: int | None = None):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    m = model_axis or (2 if n % 2 == 0 and n > 1 else 1)
+    d = n // m
+    return jax.make_mesh(
+        (d, m), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

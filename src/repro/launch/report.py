@@ -1,0 +1,108 @@
+"""Render §Dry-run / §Roofline markdown tables from the dry-run JSON
+artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .analyze import HBM_BW, ICI_BW, PEAK_FLOPS
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def load(mesh: str | None = None, tag: str = "") -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if (mesh is None or r.get("mesh") == mesh) \
+                and r.get("tag", "") == tag:
+            recs.append(r)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                             r["mesh"]))
+    return recs
+
+
+def _fmt_t(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def _fmt_b(x: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x / div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(mesh: str = "single") -> str:
+    rows = ["| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+            "roofline-frac | MF-ratio | HBM/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL "
+                        f"{r.get('error', '')[:40]} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        t = (rf["t_compute"], rf["t_memory"], rf["t_collective"])
+        dom = max(t)
+        frac = rf["t_compute"] / dom if dom else 0.0
+        ma = r.get("memory_analysis") or {}
+        hbm = (ma.get("argument_size_in_bytes", 0)
+               + ma.get("temp_size_in_bytes", 0))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_t(t[0])} "
+            f"| {_fmt_t(t[1])} | {_fmt_t(t[2])} | {rf['bottleneck']} "
+            f"| {frac:.2f} | {rf['model_flops_ratio']:.2f} "
+            f"| {_fmt_b(hbm)} |")
+    return "\n".join(rows)
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | ok | FLOPs/dev | bytes/dev | "
+            "coll bytes/dev | args/dev | temps/dev | compile |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load():
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                        f"| FAIL | | | | | | |")
+            continue
+        rf = r["roofline"]
+        ma = r.get("memory_analysis") or {}
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | yes "
+            f"| {rf['flops_per_device']:.3g} "
+            f"| {_fmt_b(rf['bytes_per_device'])} "
+            f"| {_fmt_b(rf['collective_bytes_per_device'])} "
+            f"| {_fmt_b(ma.get('argument_size_in_bytes', 0))} "
+            f"| {_fmt_b(ma.get('temp_size_in_bytes', 0))} "
+            f"| {r.get('compile_s', 0):.0f}s |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--table", choices=("roofline", "dryrun"),
+                    default="roofline")
+    args = ap.parse_args()
+    if args.table == "roofline":
+        print(roofline_table(args.mesh))
+    else:
+        print(dryrun_table())
+
+
+if __name__ == "__main__":
+    main()

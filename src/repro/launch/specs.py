@@ -1,0 +1,85 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation.  This is the single source of truth for
+what each (arch x shape) cell lowers.
+
+  train_*:    train_step(params, opt_state, batch)
+  prefill_*:  prefill(params, batch) -> (last_logits, cache)
+  decode_* / long_*: serve_step(params, tokens, cache) — one new token
+              against a seq_len-deep cache/state (ring-capped for SWA,
+              O(1) for SSM/hybrid).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, Shape, get_config
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """Input batch ShapeDtypeStructs for train/prefill phases."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "whisper":
+        dec = s // cfg.dec_seq_factor
+        out = {"embeds": sds((b, s, cfg.d_model), cfg.jdtype),
+               "tokens": sds((b, dec), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = sds((b, dec), jnp.int32)
+        return out
+    if cfg.frontend == "vision":
+        # 1/4 of the context is patch embeddings, 3/4 text tokens
+        p = s // cfg.vision_prefix_factor
+        out = {"embeds": sds((b, p, cfg.d_model), cfg.jdtype),
+               "tokens": sds((b, s - p), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = sds((b, s - p), jnp.int32)
+        return out
+    out = {"tokens": sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = sds((b, s), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: Shape) -> Any:
+    """Decode-phase cache ShapeDtypeStructs via eval_shape (no alloc)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "whisper":
+        # cross-KV depth honors the cell's seq_len; decoder self-cache is
+        # bounded by the 8192-entry learned position table
+        fn = lambda: api.init_cache(cfg, b, min(s // cfg.dec_seq_factor,
+                                                8192), enc_len=s)
+    else:
+        fn = lambda: api.init_cache(cfg, b, s)
+    return jax.eval_shape(fn)
+
+
+def decode_specs(cfg: ModelConfig, shape: Shape) -> tuple:
+    """(tokens, cache) specs for serve_step."""
+    return (sds((shape.global_batch, 1), jnp.int32),
+            cache_specs(cfg, shape))
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """Everything dryrun needs for one cell, as ShapeDtypeStructs."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    out = {"cfg": cfg, "shape": shape, "params": params_specs(cfg)}
+    if shape.kind == "decode":
+        out["tokens"], out["cache"] = decode_specs(cfg, shape)
+    else:
+        out["batch"] = batch_specs(cfg, shape)
+    return out

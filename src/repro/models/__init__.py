@@ -1,0 +1,2 @@
+from . import api, common, config, rglru, rwkv6, transformer, whisper
+from .config import ModelConfig, smoke_config

@@ -1,0 +1,275 @@
+"""Shared building blocks: norms, RoPE / M-RoPE, attention implementations
+(einsum, chunked memory-efficient, banded local/SWA), init helpers.
+
+Everything is pure JAX — params are plain nested dicts of jnp arrays.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Any   # nested dict pytree of arrays
+
+
+# --- init -------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# --- norms ------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, key):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), cfg.jparam_dtype),
+                "bias": jnp.zeros((cfg.d_model,), cfg.jparam_dtype)}
+    return {"scale": jnp.zeros((cfg.d_model,), cfg.jparam_dtype)}
+
+
+# --- RoPE / M-RoPE ----------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float, rot_dim: int | None = None):
+    """x: (B, S, H, hd); positions: (B, S) int32.  Rotates the first
+    rot_dim dims (default all)."""
+    hd = x.shape[-1]
+    rd = rot_dim or hd
+    freqs = rope_freqs(rd, theta)                          # (rd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,rd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    xr, rest = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., : rd // 2], xr[..., rd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([out.astype(x.dtype), rest], -1)
+
+
+def apply_mrope(x, positions3, theta: float,
+                sections: tuple[int, int, int]):
+    """Qwen2-VL M-RoPE. positions3: (3, B, S) — temporal/height/width ids.
+    Frequency slots are partitioned across the three position streams."""
+    hd = x.shape[-1]
+    n = hd // 2
+    freqs = rope_freqs(hd, theta)                            # (n,)
+    # section id per frequency slot
+    sec = jnp.concatenate([jnp.full((s,), i) for i, s in enumerate(sections)])
+    pos = jnp.stack([positions3[0], positions3[1], positions3[2]], 0)  # (3,B,S)
+    pos_per_slot = jnp.take(pos, sec, axis=0)                # (n,B,S)
+    ang = jnp.einsum("nbs,n->bsn", pos_per_slot.astype(jnp.float32), freqs)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :n], x[..., n:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --- attention implementations ----------------------------------------------
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+        .reshape(b, s, h * n_rep, d)
+
+
+def attn_einsum(q, k, v, *, causal: bool, window: int | None,
+                q_offset=0) -> jnp.ndarray:
+    """Plain attention. q: (B,Sq,H,hd), k/v: (B,Sk,Hkv,hd)."""
+    n_rep = q.shape[2] // k.shape[2]
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attn_chunked(q, k, v, *, causal: bool, window: int | None,
+                 chunk: int = 1024, q_offset=0) -> jnp.ndarray:
+    """Memory-efficient attention: scan over KV chunks with a running
+    (max, denominator) — the XLA-side analogue of flash attention; never
+    materializes the (Sq, Sk) score matrix."""
+    b, sq, h, hd = q.shape
+    vd = v.shape[-1]
+    sk = k.shape[1]
+    n_rep = h // k.shape[2]
+    if sk % chunk:
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kvalid = jnp.arange(k.shape[1]) < sk
+    else:
+        kvalid = jnp.ones((k.shape[1],), bool)
+    nchunks = k.shape[1] // chunk
+    kc = k.reshape(b, nchunks, chunk, k.shape[2], hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, v.shape[2], vd).transpose(1, 0, 2, 3, 4)
+    valid_c = kvalid.reshape(nchunks, chunk)
+    scale = 1.0 / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ki, vi, valid_i, ci = xs
+        ki, vi = repeat_kv(ki, n_rep), repeat_kv(vi, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, ki).astype(jnp.float32) * scale
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]
+        msk = valid_i[None, :] & jnp.ones((sq, chunk), bool)
+        if causal:
+            msk &= kpos <= qpos
+        if window is not None:
+            msk &= kpos > qpos - window
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        # fully-masked chunks: keep p exactly 0 (avoid exp(-inf - -inf)=1)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[..., None]))
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vi).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, vd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc, vc, valid_c, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attn_local(q, k, v, *, window: int, q_offset=0) -> jnp.ndarray:
+    """Banded causal attention for SWA prefill: O(S*W) FLOPs, never
+    quadratic.  Queries are chunked by `window`; each chunk attends to its
+    own chunk plus the previous one."""
+    b, s, h, hd = q.shape
+    w = window
+    if s % w:
+        pad = w - s % w
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        pad = 0
+        qp, kp, vp = q, k, v
+    sp = qp.shape[1]
+    nq = sp // w
+    n_rep = h // k.shape[2]
+    qc = qp.reshape(b, nq, w, h, hd)
+    kc = kp.reshape(b, nq, w, kp.shape[2], hd)
+    vc = vp.reshape(b, nq, w, vp.shape[2], hd)
+    # previous chunk (zeros for chunk 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], 1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], 1)
+    kcat = jnp.concatenate([kprev, kc], 2)          # (B,nq,2w,Hkv,hd)
+    vcat = jnp.concatenate([vprev, vc], 2)
+    kcat = repeat_kv(kcat.reshape(b * nq, 2 * w, kp.shape[2], hd), n_rep)
+    vcat = repeat_kv(vcat.reshape(b * nq, 2 * w, vp.shape[2], hd), n_rep)
+    qf = qc.reshape(b * nq, w, h, hd)
+    scale = 1.0 / math.sqrt(hd)
+    sco = jnp.einsum("bqhd,bkhd->bhqk", qf, kcat).astype(jnp.float32) * scale
+    qpos = jnp.arange(w)[:, None] + w                 # position within 2w
+    kpos = jnp.arange(2 * w)[None, :]
+    chunk0 = (jnp.arange(b * nq) % nq) == 0
+    mask = (kpos <= qpos) & (kpos > qpos - w)
+    mask = jnp.broadcast_to(mask[None], (b * nq, w, 2 * w))
+    mask &= ~(chunk0[:, None, None] & (kpos[None] < w))
+    sco = jnp.where(mask[:, None], sco, NEG_INF)
+    probs = jax.nn.softmax(sco, -1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vcat)
+    vd = v.shape[-1]
+    out = out.reshape(b, nq, w, h, vd).reshape(b, sp, h, vd)
+    return out[:, :s] if pad else out
+
+
+def attention(cfg: ModelConfig, q, k, v, *, causal=True, q_offset=0,
+              decode=False) -> jnp.ndarray:
+    """Dispatch on cfg.attn_impl / shape heuristics."""
+    impl = cfg.attn_impl
+    s = q.shape[1]
+    if impl == "auto":
+        if decode or s == 1:
+            impl = "einsum"
+        elif cfg.window is not None and s > cfg.window:
+            impl = "local"
+        elif s > 4096:
+            impl = "chunked"
+        else:
+            impl = "einsum"
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as fops
+        return fops.flash_attention(q, k, v, causal=causal,
+                                    window=cfg.window)
+    if impl == "local":
+        return attn_local(q, k, v, window=cfg.window, q_offset=q_offset)
+    if impl == "chunked":
+        return attn_chunked(q, k, v, causal=causal, window=cfg.window,
+                            chunk=cfg.attn_chunk, q_offset=q_offset)
+    return attn_einsum(q, k, v, causal=causal, window=cfg.window,
+                       q_offset=q_offset)
+
+
+# --- misc -------------------------------------------------------------------
+
+def maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=None)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """Mean CE over valid positions. logits (B,S,V) fp32-cast internally."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].clip(0), -1)[..., 0]
+    valid = (labels != ignore_id).astype(jnp.float32)
+    loss = (lse - ll) * valid
+    return loss.sum() / jnp.maximum(valid.sum(), 1.0)

@@ -1,0 +1,169 @@
+"""Unified model configuration for the whole zoo.
+
+One frozen dataclass parameterizes every assigned architecture family:
+dense/GQA transformers (with QKV bias, SWA, tied embeddings), MoE
+(shared+routed, first-k-dense), MLA latent attention + MTP (DeepSeek-V3),
+M-RoPE VLM backbones, RG-LRU hybrids, RWKV6, and whisper-style enc-dec.
+`repro.configs.<arch>` instantiates these with the exact assigned values.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "transformer"       # transformer | rglru | rwkv6 | whisper
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    kv_heads: int = 2
+    d_ff: int = 256
+    vocab: int = 256
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    swiglu: bool = True
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    window: int | None = None         # sliding-window attention
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    first_dense_layers: int = 0       # DeepSeek: first k layers stay dense
+    moe_d_ff: int | None = None       # routed-expert width if != d_ff
+    capacity_factor: float = 1.25
+
+    # MLA (DeepSeek-V3)
+    mla_q_rank: int = 0
+    mla_kv_rank: int = 0
+    mla_rope_dim: int = 64
+    mtp: bool = False                 # multi-token-prediction head (train)
+
+    # M-RoPE (Qwen2-VL): rope dims split over (temporal, height, width)
+    mrope_sections: tuple[int, int, int] | None = None
+
+    # RG-LRU hybrid (RecurrentGemma): cyclic [rec, rec, attn] pattern
+    attn_every: int = 0               # 3 => every 3rd layer is attention
+    lru_width: int | None = None
+    conv_width: int = 4
+
+    # RWKV6
+    wkv_chunk: int = 32               # chunk length for the chunked WKV form
+    wkv_lora: int = 32                # rank of the data-dependent decay LoRA
+
+    # Whisper enc-dec
+    n_enc_layers: int = 0
+    dec_seq_factor: int = 4           # decoder seq = enc seq / factor
+
+    # Modality frontend stub ("input_specs() provides precomputed
+    # frame/patch embeddings" per the assignment)
+    frontend: str = "none"            # none | vision | audio
+    vision_prefix_factor: int = 4     # 1/4 of train seq is patch embeds
+
+    # Performance variants (hillclimb knobs — see EXPERIMENTS.md §Perf)
+    gqa_einsum: bool = False      # grouped attention w/o KV head repeat
+    shard_hints: bool = False     # with_sharding_constraint in MoE path
+    fused_ce: bool = False        # chunked-vocab cross entropy (train mem)
+    moe_groups: int = 0           # two-hop MoE dispatch: G shard-local
+                                  # scatters + one explicit all-to-all
+    moe_shard_map: bool = False   # explicit EP: shard_map + lax.all_to_all
+    cache_seq_shard: bool = False # decode cache length sharded on model
+
+    # Numerics / execution
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    remat: str = "none"               # none | full | dots
+    attn_impl: str = "auto"           # auto | einsum | chunked | local | flash
+    attn_chunk: int = 1024            # kv-chunk for chunked/local attention
+    scan_layers: bool = True          # lax.scan over stacked layer params
+    scan_min_layers: int = 8
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.hd
+
+    @property
+    def use_mla(self) -> bool:
+        return self.mla_kv_rank > 0
+
+    @property
+    def use_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def jdtype(self):
+        return DTYPES[self.dtype]
+
+    @property
+    def jparam_dtype(self):
+        return DTYPES[self.param_dtype]
+
+    @property
+    def routed_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self) -> None:
+        assert self.family in ("transformer", "rglru", "rwkv6", "whisper")
+        if self.family == "transformer":
+            assert self.n_heads % max(self.kv_heads, 1) == 0
+        if self.use_moe:
+            assert 0 < self.top_k <= self.n_experts
+        if self.family == "rglru":
+            assert self.attn_every >= 2
+        if self.family == "whisper":
+            assert self.n_enc_layers > 0
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests (assignment: small
+    layers/width, few experts, tiny embedding tables)."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.family != "rglru" else 6),
+        d_model=128,
+        n_heads=4,
+        kv_heads=max(1, min(cfg.kv_heads, 2)),
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+        dtype="float32", param_dtype="float32",
+        scan_layers=cfg.scan_layers,
+        scan_min_layers=2,
+        attn_chunk=64,
+    )
+    if cfg.use_moe:
+        kw.update(n_experts=4, top_k=2,
+                  n_shared_experts=min(cfg.n_shared_experts, 1),
+                  first_dense_layers=min(cfg.first_dense_layers, 1),
+                  moe_d_ff=64 if cfg.moe_d_ff else None)
+    if cfg.use_mla:
+        kw.update(mla_q_rank=64, mla_kv_rank=32, mla_rope_dim=16)
+    if cfg.window:
+        kw.update(window=64)
+    if cfg.family == "rglru":
+        kw.update(lru_width=128, attn_every=cfg.attn_every)
+    if cfg.family == "whisper":
+        kw.update(n_enc_layers=2, n_layers=2)
+    if cfg.mrope_sections:
+        kw.update(mrope_sections=(4, 6, 6))     # sums to hd/2 = 16
+    return cfg.replace(**kw)

@@ -1,0 +1,296 @@
+"""RecurrentGemma-style hybrid (Griffin): RG-LRU recurrent blocks with a
+cyclic [rec, rec, local-attn] pattern (paper arXiv:2402.19427).
+
+Temporal mixing per layer is either
+  * a recurrent block: two linear branches to `lru_width`; branch 1 goes
+    through a short causal depthwise conv then the RG-LRU diagonal
+    recurrence  h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*x_t),
+    a_t = exp(-c * softplus(L) * r_t);  branch 2 is a GeLU gate;
+  * or local (sliding-window, MQA) attention.
+
+Train/prefill evaluates the recurrence with an associative scan
+(log-depth); decode carries (h, conv window) state.  State is O(1) in
+sequence length — this is why long_500k runs for this arch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import (apply_norm, apply_rope, attention, dense_init,
+                     embed_init, init_norm, maybe_remat, rmsnorm)
+from .config import ModelConfig
+
+Params = Any
+RGLRU_C = 8.0
+
+
+def is_attn_layer(cfg: ModelConfig, i: int) -> bool:
+    return (i % cfg.attn_every) == cfg.attn_every - 1
+
+
+def _init_rec(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    pd = cfg.jparam_dtype
+    return {
+        "w_x": dense_init(ks[0], (d, w), pd),
+        "w_gate": dense_init(ks[1], (d, w), pd),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1
+                   ).astype(pd),
+        "conv_b": jnp.zeros((w,), pd),
+        "wa": dense_init(ks[3], (w, w), pd),
+        "wx_in": dense_init(ks[4], (w, w), pd),
+        "lam": (jax.random.uniform(ks[5], (w,), minval=0.4, maxval=0.9)
+                ).astype(jnp.float32),
+        "w_out": dense_init(ks[6], (w, d), pd,
+                            scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _init_attn(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    pd = cfg.jparam_dtype
+    return {
+        "wq": dense_init(ks[0], (d, qd), pd),
+        "wk": dense_init(ks[1], (d, kvd), pd),
+        "wv": dense_init(ks[2], (d, kvd), pd),
+        "wo": dense_init(ks[3], (qd, d), pd,
+                         scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _init_mlp(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    pd = cfg.jparam_dtype
+    return {"w_in": dense_init(ks[0], (d, f), pd),
+            "w_gate": dense_init(ks[1], (d, f), pd),
+            "w_out": dense_init(ks[2], (f, d), pd,
+                                scale=0.02 / math.sqrt(2 * cfg.n_layers))}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[i], 4)
+        p = {"norm1": init_norm(cfg, ks[0]), "norm2": init_norm(cfg, ks[1]),
+             "mlp": _init_mlp(cfg, ks[2])}
+        if is_attn_layer(cfg, i):
+            p["attn"] = _init_attn(cfg, ks[3])
+        else:
+            p["rec"] = _init_rec(cfg, ks[3])
+        layers.append(p)
+    return {"embed": embed_init(keys[-3], (cfg.vocab, cfg.d_model),
+                                cfg.jparam_dtype),
+            "final_norm": init_norm(cfg, keys[-2]),
+            "layers": layers}   # tied embeddings (gemma-style unembed)
+
+
+# --- RG-LRU core ------------------------------------------------------------
+
+def _rglru_coeffs(cfg: ModelConfig, p: Params, x):
+    """x: (B,S,w) post-conv. Returns (a, b): h_t = a_t h + b_t."""
+    dt = cfg.jdtype
+    r = jax.nn.sigmoid((x @ p["wa"].astype(dt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["wx_in"].astype(dt)).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return a, b
+
+
+def rglru_scan(a, b, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def causal_conv(cfg: ModelConfig, p: Params, x, state=None):
+    """Short depthwise causal conv. x (B,S,w); state (B, cw-1, w)."""
+    cw = cfg.conv_width
+    pad = state if state is not None else \
+        jnp.zeros(x.shape[:1] + (cw - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+              for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad
+    return out + p["conv_b"].astype(x.dtype), new_state
+
+
+def rec_block(cfg: ModelConfig, p: Params, x, state=None):
+    """state: {"h": (B,w) fp32, "conv": (B,cw-1,w)} or None (prefill)."""
+    dt = cfg.jdtype
+    u = x @ p["w_x"].astype(dt)
+    g = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    u, conv_state = causal_conv(cfg, p, u,
+                                None if state is None else state["conv"])
+    a, b = _rglru_coeffs(cfg, p, u)
+    h0 = None if state is None else state["h"]
+    h = rglru_scan(a, b, h0)
+    y = (h.astype(dt) * g) @ p["w_out"].astype(dt)
+    new_state = {"h": h[:, -1], "conv": conv_state}
+    return y, new_state
+
+
+def attn_full(cfg: ModelConfig, p: Params, x, positions):
+    bsz, s, _ = x.shape
+    dt = cfg.jdtype
+    q = (x @ p["wq"].astype(dt)).reshape(bsz, s, cfg.n_heads, cfg.hd)
+    k = (x @ p["wk"].astype(dt)).reshape(bsz, s, cfg.kv_heads, cfg.hd)
+    v = (x @ p["wv"].astype(dt)).reshape(bsz, s, cfg.kv_heads, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attention(cfg, q, k, v, causal=True)
+    return o.reshape(bsz, s, cfg.q_dim) @ p["wo"].astype(dt), (k, v)
+
+
+def mlp(cfg: ModelConfig, p: Params, x):
+    dt = cfg.jdtype
+    h = jax.nn.gelu(x @ p["w_gate"].astype(dt)) * (x @ p["w_in"].astype(dt))
+    return h @ p["w_out"].astype(dt)
+
+
+# --- forward / decode -------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, positions=None,
+            collect_state: bool = False):
+    x = jnp.take(params["embed"].astype(cfg.jdtype), tokens, axis=0)
+    x = x * math.sqrt(cfg.d_model)
+    bsz, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+    states = []
+
+    def layer(h, p, i):
+        hn = apply_norm(cfg, p["norm1"], h)
+        if is_attn_layer(cfg, i):
+            a, st = attn_full(cfg, p["attn"], hn, positions)
+        else:
+            a, st = rec_block(cfg, p["rec"], hn)
+        h = h + a
+        h = h + mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], h))
+        return h, st
+
+    for i, p in enumerate(params["layers"]):
+        body = maybe_remat(lambda h, _p=p, _i=i: layer(h, _p, _i), cfg)
+        x, st = body(x)
+        states.append(st)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = x @ params["embed"].astype(cfg.jdtype).T
+    if collect_state:
+        return logits, states
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch):
+    from .common import cross_entropy
+    logits = forward(cfg, params, batch["tokens"])
+    return cross_entropy(logits, batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    w = cfg.lru_width or cfg.d_model
+    clen = min(max_len, cfg.window or max_len)
+    layers = []
+    for i in range(cfg.n_layers):
+        if is_attn_layer(cfg, i):
+            layers.append({
+                "k": jnp.zeros((batch, clen, cfg.kv_heads, cfg.hd),
+                               cfg.jdtype),
+                "v": jnp.zeros((batch, clen, cfg.kv_heads, cfg.hd),
+                               cfg.jdtype)})
+        else:
+            layers.append({
+                "h": jnp.zeros((batch, w), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, w),
+                                  cfg.jdtype)})
+    return {"layers": layers, "index": jnp.zeros((), jnp.int32)}
+
+
+def _decode_attn(cfg: ModelConfig, p: Params, x, lc, index):
+    bsz = x.shape[0]
+    dt = cfg.jdtype
+    pos1 = jnp.full((bsz, 1), index, jnp.int32)
+    q = (x @ p["wq"].astype(dt)).reshape(bsz, 1, cfg.n_heads, cfg.hd)
+    k = (x @ p["wk"].astype(dt)).reshape(bsz, 1, cfg.kv_heads, cfg.hd)
+    v = (x @ p["wv"].astype(dt)).reshape(bsz, 1, cfg.kv_heads, cfg.hd)
+    q = apply_rope(q, pos1, cfg.rope_theta)
+    k = apply_rope(k, pos1, cfg.rope_theta)
+    K, V = lc["k"], lc["v"]
+    clen = K.shape[1]
+    slot = index % clen
+    K = jax.lax.dynamic_update_slice(K, k.astype(K.dtype), (0, slot, 0, 0))
+    V = jax.lax.dynamic_update_slice(V, v.astype(V.dtype), (0, slot, 0, 0))
+    n_rep = cfg.n_heads // cfg.kv_heads
+    Kr = jnp.repeat(K.astype(dt), n_rep, 2) if n_rep > 1 else K.astype(dt)
+    Vr = jnp.repeat(V.astype(dt), n_rep, 2) if n_rep > 1 else V.astype(dt)
+    sc = jnp.einsum("bqhd,bchd->bhqc", q, Kr).astype(jnp.float32) \
+        / math.sqrt(cfg.hd)
+    j = jnp.arange(clen)
+    kpos = index - ((index - j) % clen)
+    mask = (kpos >= 0) & (kpos <= index)
+    if cfg.window:
+        mask &= kpos > index - cfg.window
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    pr = jax.nn.softmax(sc, -1).astype(dt)
+    o = jnp.einsum("bhqc,bchd->bqhd", pr, Vr)
+    out = o.reshape(bsz, 1, cfg.q_dim) @ p["wo"].astype(dt)
+    return out, {"k": K, "v": V}
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
+    index = cache["index"]
+    x = jnp.take(params["embed"].astype(cfg.jdtype), tokens, axis=0)
+    x = x * math.sqrt(cfg.d_model)
+    new_layers = []
+    for i, (p, lc) in enumerate(zip(params["layers"], cache["layers"])):
+        hn = apply_norm(cfg, p["norm1"], x)
+        if is_attn_layer(cfg, i):
+            a, nc = _decode_attn(cfg, p["attn"], hn, lc, index)
+        else:
+            a, nc = rec_block(cfg, p["rec"], hn, state=lc)
+        x = x + a
+        x = x + mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+        new_layers.append(nc)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = x @ params["embed"].astype(cfg.jdtype).T
+    return logits, {"layers": new_layers, "index": index + 1}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len: int):
+    s = tokens.shape[1]
+    logits, states = forward(cfg, params, tokens, collect_state=True)
+    cache = init_cache(cfg, tokens.shape[0], max_len)
+    clen = min(max_len, cfg.window or max_len)
+    new_layers = []
+    for i, st in enumerate(states):
+        if is_attn_layer(cfg, i):
+            k, v = st                       # (B,S,kvh,hd)
+            take = min(s, clen)
+            def place(src):
+                last = src[:, s - take:s]
+                if take < clen:
+                    return jnp.pad(last, ((0, 0), (0, clen - take),
+                                          (0, 0), (0, 0)))
+                return jnp.roll(last, shift=s % clen, axis=1)
+            new_layers.append({"k": place(k).astype(cfg.jdtype),
+                               "v": place(v).astype(cfg.jdtype)})
+        else:
+            new_layers.append(st)
+    return logits[:, -1:], {"layers": new_layers,
+                            "index": jnp.asarray(s, jnp.int32)}

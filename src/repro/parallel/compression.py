@@ -1,0 +1,63 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization
+trick): per-tensor int8 quantization with error feedback.
+
+Usage inside a shard_map'd or pmap'd step:
+    q, scale = quantize(g + err)
+    q_sum    = lax.psum(q.astype(f32), axis)      # 4x fewer wire bytes
+    g_hat    = dequantize(q_sum, scale_max) / n
+    err_new  = (g + err) - dequantize(q, scale)
+
+Under pjit/SPMD the all-reduce is compiler-inserted, so `compressed_mean`
+exposes the same math as a drop-in for the gradient tree; error feedback
+state rides in the optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tree(grads: Params, err: Params
+                  ) -> tuple[Params, Params, Params]:
+    """(quantized ints, scales, new error feedback)."""
+    def one(g, e):
+        ge = g.astype(jnp.float32) + e
+        q, s = quantize_int8(ge)
+        return q, s, ge - dequantize_int8(q, s)
+    out = jax.tree.map(one, grads, err)
+    is_t = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda o: o[0], out, is_leaf=is_t),
+            jax.tree.map(lambda o: o[1], out, is_leaf=is_t),
+            jax.tree.map(lambda o: o[2], out, is_leaf=is_t))
+
+
+def decompress_tree(q: Params, scales: Params) -> Params:
+    return jax.tree.map(dequantize_int8, q, scales)
+
+
+def compressed_gradients(grads: Params, err: Params
+                         ) -> tuple[Params, Params]:
+    """Quantize-dequantize the gradient tree with error feedback: what the
+    wire would carry under int8 DP all-reduce.  Returns (g_hat, err_new).
+    """
+    q, s, err_new = compress_tree(grads, err)
+    return decompress_tree(q, s), err_new

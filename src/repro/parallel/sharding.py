@@ -1,0 +1,270 @@
+"""Sharding rules: one place that maps every parameter / activation /
+cache leaf to a PartitionSpec over the ("pod", "data", "model") mesh.
+
+Conventions (TP over "model", DP over ("pod","data"), EP = experts over
+"model", SP = long-context sequence sharding where batch cannot shard):
+
+  * attention: wq/wuq sharded on the head (output) dim, wo on the input
+    dim; wk/wv sharded when kv_dim divides the model axis, else
+    replicated (GQA with few kv heads).
+  * MLP: w_in/w_gate on d_ff, w_out on d_ff (input dim).
+  * MoE: experts_* sharded on the expert dim (EP).
+  * embed/head: vocab-sharded.
+  * batch dims of activations/caches over ("pod","data"); dims only shard
+    when divisible (`_div` guard) — otherwise replicate and let the
+    roofline show the cost.
+
+Stacked-layer params have a leading layer axis which never shards.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+DP_AXES = ("pod", "data")
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in DP_AXES if a in mesh.shape) or None
+
+
+# --- parameter rules --------------------------------------------------------
+
+# (regex on the '/'-joined path, spec builder given (mesh, shape)).
+# Specs are written for the UNSTACKED layer shape; a leading stacked-layer
+# dim is detected by rank and padded with None.
+#
+# fsdp=True additionally shards the chosen dim over the DP axes (ZeRO-3
+# style): required for 100B+ params where TP-only replication overflows
+# HBM.  The axis candidates are tried widest-first with a divisibility
+# guard.
+
+def _shard_axis(mesh, dim: int, fsdp: bool):
+    cands = ([("pod", "data", "model"), ("data", "model"), "model"]
+             if fsdp else ["model"])
+    for c in cands:
+        names = c if isinstance(c, tuple) else (c,)
+        if all(n in mesh.shape for n in names) and \
+                _div(dim, axis_size(mesh, c)):
+            return c
+    return None
+
+
+def _param_rules():
+    def col(mesh, shape, fsdp):     # shard last dim
+        return P(*([None] * (len(shape) - 1)),
+                 _shard_axis(mesh, shape[-1], fsdp))
+
+    def row(mesh, shape, fsdp):     # shard first-of-matrix dim
+        return P(_shard_axis(mesh, shape[0], fsdp),
+                 *([None] * (len(shape) - 1)))
+
+    def expert_in(mesh, shape, fsdp):   # (E, d, f): EP, else TP on f
+        ax = _shard_axis(mesh, shape[0], fsdp)
+        if ax is not None:
+            return P(ax, *([None] * (len(shape) - 1)))
+        # §Perf: E < mesh axis (e.g. mixtral 8e on 16-way model) would
+        # replicate ~90GB of expert weights per device; shard d_ff.
+        return P(None, *([None] * (len(shape) - 2)),
+                 _shard_axis(mesh, shape[-1], False))
+
+    def expert_out(mesh, shape, fsdp):  # (E, f, d): EP, else TP on f
+        ax = _shard_axis(mesh, shape[0], fsdp)
+        if ax is not None:
+            return P(ax, *([None] * (len(shape) - 1)))
+        return P(None, _shard_axis(mesh, shape[1], False),
+                 *([None] * (len(shape) - 2)))
+
+    def repl(mesh, shape, fsdp):
+        return P(*([None] * len(shape)))
+
+    return [
+        (r"(^|/)embed$", row),                      # (V, d) vocab-sharded
+        (r"(^|/)head$", col),                       # (d, V)
+        (r"(^|/)dec_pos$", repl),
+        (r"/attn/w(q|uq)$", col),
+        (r"/attn/w(k|v)$", col),
+        (r"/attn/wo$", row),
+        (r"/attn/w(dq|dkv)$", repl),
+        (r"/attn/w(uk|uv)$", col),
+        (r"/(self_attn|cross_attn)/w[qkv]$", col),
+        (r"/(self_attn|cross_attn)/wo$", row),
+        (r"/mlp/w_(in|gate)$", col),
+        (r"/mlp/w_out$", row),
+        (r"/moe/experts_(in|gate)$", expert_in),
+        (r"/moe/experts_out$", expert_out),
+        (r"/moe/router$", repl),
+        (r"/moe/shared/w_(in|gate)$", col),
+        (r"/moe/shared/w_out$", row),
+        # rglru
+        (r"/rec/w_(x|gate)$", col),
+        (r"/rec/w_out$", row),
+        (r"/rec/(wa|wx_in)$", col),
+        (r"/rec/(conv_w|conv_b|lam)$", repl),
+        # rwkv6
+        (r"/att/w[rkvg]$", col),
+        (r"/att/wo$", row),
+        (r"/att/w[ab]$", repl),
+        (r"/ffn/wk$", col),
+        (r"/ffn/wv$", row),
+        (r"/ffn/wr$", col),
+        (r"/mtp/proj$", repl),
+    ]
+
+
+_RULES = _param_rules()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(mesh: Mesh, path: str, shape, stacked: bool,
+               fsdp: bool = False) -> P:
+    base_shape = shape[1:] if stacked else shape
+    for pat, fn in _RULES:
+        if re.search(pat, path):
+            spec = fn(mesh, base_shape, fsdp)
+            if stacked:
+                spec = P(None, *spec)
+            return spec
+    return P(*([None] * len(shape)))
+
+
+def param_spec_map(mesh: Mesh, params_shape: Any,
+                   fsdp: bool = False) -> dict[str, P]:
+    """path string -> PartitionSpec for every param leaf."""
+    out = {}
+    for path, x in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        ps = _path_str(path)
+        stacked = "segments/" in ps and hasattr(x, "ndim") and x.ndim >= 1
+        out[ps] = param_spec(mesh, ps, x.shape, stacked, fsdp)
+    return out
+
+
+def params_shardings(mesh: Mesh, params_shape: Any,
+                     fsdp: bool = False) -> Any:
+    """NamedShardings for a params pytree (of arrays or ShapeDtypeStructs).
+    Leaves under a 'segments'/'layers' list of stacked layer params get a
+    leading unsharded layer dim iff their rank exceeds the rule's shape."""
+    def leaf(path, x):
+        ps = _path_str(path)
+        stacked = "segments/" in ps and hasattr(x, "ndim") and x.ndim >= 1
+        return NamedSharding(mesh,
+                             param_spec(mesh, ps, x.shape, stacked, fsdp))
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def optimizer_shardings(mesh: Mesh, params_shape: Any, opt_shape: Any,
+                        fsdp: bool = False) -> Any:
+    """Shardings for the optimizer-state tree: AdamW moments mirror their
+    parameter's spec; Adafactor factored stats drop the corresponding
+    spec dim (vr drops last, vc drops second-to-last)."""
+    pmap = param_spec_map(mesh, params_shape, fsdp)
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        rest, tail = ps, None
+        for prefix in ("inner/mu/", "inner/nu/", "inner/v/",
+                       "error_feedback/"):
+            if ps.startswith(prefix):
+                rest = ps[len(prefix):]
+                break
+        for t in ("/vr", "/vc", "/v"):
+            if rest.endswith(t):
+                tail, rest = t, rest[: -len(t)]
+                break
+        spec = pmap.get(rest)
+        if spec is None:
+            return NamedSharding(mesh, P(*([None] * x.ndim)))
+        parts = list(spec)
+        if tail == "/vr":
+            parts = parts[:-1]
+        elif tail == "/vc":
+            parts = parts[:-2] + parts[-1:]
+        parts = (parts + [None] * x.ndim)[: x.ndim]
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(leaf, opt_shape)
+
+
+# --- activation / batch / cache rules ----------------------------------------
+
+def batch_spec(mesh: Mesh, batch_size: int, ndim: int) -> P:
+    dp = dp_axes(mesh)
+    if dp and _div(batch_size, axis_size(mesh, dp)):
+        return P(dp, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def data_shardings(mesh: Mesh, batch: Any) -> Any:
+    """Shard every leaf's leading (batch) dim over DP axes when divisible;
+    embeds (B,S,d) likewise."""
+    def leaf(x):
+        return NamedSharding(mesh, batch_spec(mesh, x.shape[0], x.ndim))
+    return jax.tree.map(leaf, batch)
+
+
+def cache_shardings(mesh: Mesh, cache: Any, kv_heads: int,
+                    batch_size: int, seq_shard: bool = False) -> Any:
+    """KV caches: batch over DP; head dim over model when divisible; for
+    batch=1 long-context cells, shard the sequence dim over "data" (SP).
+
+    seq_shard (§Perf): when kv heads cannot shard over "model" (GQA with
+    few kv heads), shard the cache LENGTH dim over "model" instead —
+    attention becomes a sequence-parallel partial-softmax reduction and
+    per-device cache traffic drops by the model-axis size."""
+    dp = dp_axes(mesh)
+    dsz = axis_size(mesh, dp) if dp else 1
+    msz = axis_size(mesh, "model")
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        dims: list = [None] * x.ndim
+        # layouts: (L,B,C,kvh,hd) | (B,C,kvh,hd) | (L,B,C,D) | (B,H,D,D)...
+        bdim = 1 if ("segments" in ps and x.ndim >= 3) else 0
+        if _div(x.shape[bdim], dsz) and x.shape[bdim] > 1 and dp:
+            dims[bdim] = dp
+        elif x.ndim > bdim + 1 and _div(x.shape[bdim + 1], dsz) and dp \
+                and x.shape[bdim] == 1 and x.shape[bdim + 1] >= dsz:
+            dims[bdim + 1] = dp            # SP on the cache length dim
+        # shard kv-head-ish dim on model when divisible
+        assigned = False
+        for i in range(x.ndim - 2, x.ndim):
+            if i > bdim and dims[i] is None and _div(x.shape[i], msz) \
+                    and x.shape[i] >= msz and i != x.ndim - 1:
+                dims[i] = "model"
+                assigned = True
+                break
+        cdim = bdim + 1
+        if seq_shard and not assigned and x.ndim >= cdim + 2 \
+                and dims[cdim] is None and _div(x.shape[cdim], msz) \
+                and x.shape[cdim] >= 4 * msz:
+            dims[cdim] = "model"
+        return NamedSharding(mesh, P(*dims))
+    return jax.tree_util.tree_map_with_path(leaf, cache)

@@ -1,0 +1,140 @@
+"""Serving engine: slot-based continuous batching with the Mozart
+operator-level batching policy (Insight 2).
+
+A fixed pool of `max_batch` cache slots decodes in lock-step (static
+shapes); finished slots are refilled by prefilling queued requests and
+splicing their cache into the slot.  The paper's non-uniform batching
+maps here as: decode batch size and prefill parallelism are set from the
+Mozart `ExecutionPolicy` (batch-agnostic attention wants small per-op
+batch with high TP; batch-sensitive projections want the opposite — the
+engine's `decode_batch` honors the policy's compromise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from .sampling import sample
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _tree_set_slot(batched, single, b: int):
+    """Write `single` (batch dim 1 or absent on index leaves) into slot b
+    of `batched` along the batch dimension."""
+    def leaf(dst, src):
+        if dst.ndim == 0:
+            return src if src.ndim == 0 else src.reshape(())
+        # find the batch dim: first dim where dst differs from src by
+        # factor max_batch vs 1 — conventionally dims named (B,...) or
+        # (L,B,...) (stacked segments).
+        if dst.ndim == src.ndim:
+            for axis in range(dst.ndim):
+                if src.shape[axis] == 1 and dst.shape[axis] > 1:
+                    idx = [slice(None)] * dst.ndim
+                    idx[axis] = slice(b, b + 1)
+                    return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+        return dst
+    return jax.tree.map(leaf, batched, single)
+
+
+class ServingEngine:
+    def __init__(self, mcfg: ModelConfig, params: Params, *,
+                 max_batch: int = 4, max_len: int = 512,
+                 decode_batch: int | None = None, eos_id: int = -1):
+        self.mcfg = mcfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.decode_batch = decode_batch or max_batch
+        self.eos_id = eos_id
+        self.cache = api.init_cache(mcfg, max_batch, max_len)
+        # per-slot cache lengths (vector index -> mixed-length batching)
+        self.cache["index"] = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: list[Request | None] = [None] * max_batch
+        self.queue: list[Request] = []
+        self.next_token = np.zeros((max_batch, 1), np.int32)
+        self.key = jax.random.PRNGKey(0)
+        self._decode = jax.jit(
+            lambda p, t, c: api.decode_step(mcfg, p, t, c))
+        self._prefill = jax.jit(
+            lambda p, toks: api.prefill(mcfg, p, {"tokens": toks}, max_len))
+        self.stats = {"decode_steps": 0, "prefills": 0,
+                      "tokens_out": 0, "slot_occupancy": []}
+
+    # -- request lifecycle --------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (continuous batching)."""
+        for b in range(self.max_batch):
+            if self.slots[b] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+            last, cache1 = self._prefill(self.params, toks)
+            idx_vec = self.cache["index"]
+            self.cache = _tree_set_slot(self.cache, cache1, b)
+            self.cache["index"] = idx_vec.at[b].set(len(req.prompt))
+            self.slots[b] = req
+            tok = int(jnp.argmax(last[0, -1]))
+            req.out_tokens.append(tok)
+            self.next_token[b, 0] = tok
+            self.stats["prefills"] += 1
+
+    # -- decode tick ---------------------------------------------------------
+    def step(self) -> int:
+        """One lock-step decode over active slots; returns #active."""
+        self._admit()
+        active = [b for b, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        logits, new_cache = self._decode(
+            self.params, jnp.asarray(self.next_token), self.cache)
+        self.cache = new_cache
+        self.stats["decode_steps"] += 1
+        self.stats["slot_occupancy"].append(len(active) / self.max_batch)
+        # inactive slots must not advance their cache index
+        inactive = [b for b in range(self.max_batch) if b not in active]
+        if inactive:
+            idx = self.cache["index"]
+            for b in inactive:
+                idx = idx.at[b].add(-1)
+            self.cache["index"] = idx
+        for b in active:
+            req = self.slots[b]
+            self.key, k = jax.random.split(self.key)
+            tok = int(sample(logits[b, -1:], k,
+                             temperature=req.temperature)[0])
+            req.out_tokens.append(tok)
+            self.next_token[b, 0] = tok
+            self.stats["tokens_out"] += 1
+            if len(req.out_tokens) >= req.max_new_tokens or \
+                    tok == self.eos_id:
+                req.done = True
+                self.slots[b] = None
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1

@@ -1,0 +1,24 @@
+"""Token sampling: greedy / temperature / top-k / top-p."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 1.0):
+    """logits: (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf < kth, -1e30, lf)
+    if top_p < 1.0:
+        sorted_l = jnp.sort(lf, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(csum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx, axis=-1)
+        lf = jnp.where(lf < cutoff, -1e30, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

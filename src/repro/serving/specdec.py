@@ -1,0 +1,133 @@
+"""Speculative decoding (Leviathan et al. [38]; paper §6.2.1 case study).
+
+A small draft model proposes k tokens; the target verifies them in one
+batched forward pass.  The draft path is latency-critical while the
+verifier is throughput-oriented — exactly the operator-level
+latency/throughput split Mozart exploits (draft -> speed-optimized
+chiplets, verifier -> throughput-optimized ones).
+
+`spec_decode_greedy` is exactly equivalent to target-only greedy decoding
+(the property the tests assert).  `spec_decode_sampled` implements the
+stochastic acceptance rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+Forward = Callable[[jnp.ndarray], jnp.ndarray]   # tokens (1,S) -> logits
+
+
+@dataclasses.dataclass
+class SpecStats:
+    iterations: int = 0
+    proposed: int = 0
+    accepted: int = 0
+    bonus: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.proposed, 1)
+
+    @property
+    def tokens_per_iteration(self) -> float:
+        return (self.accepted + self.bonus) / max(self.iterations, 1)
+
+
+def spec_decode_greedy(target_fwd: Forward, draft_fwd: Forward,
+                       prompt: np.ndarray, *, k: int = 5,
+                       max_new_tokens: int = 32
+                       ) -> tuple[np.ndarray, SpecStats]:
+    """Greedy speculative decoding; output == greedy decode of target."""
+    toks = list(int(t) for t in prompt)
+    stats = SpecStats()
+    while len(toks) - len(prompt) < max_new_tokens:
+        stats.iterations += 1
+        # draft proposes k tokens autoregressively (greedy)
+        d = list(toks)
+        for _ in range(k):
+            logits = draft_fwd(jnp.asarray([d], jnp.int32))
+            d.append(int(jnp.argmax(logits[0, -1])))
+        proposal = d[len(toks):]
+        stats.proposed += k
+        # target verifies in ONE forward over [toks + proposal]
+        logits = target_fwd(jnp.asarray([d], jnp.int32))
+        # target's greedy choice at each position that predicts
+        # proposal[i] is index len(toks)-1+i
+        n_accept = 0
+        base = len(toks) - 1
+        tgt_choice = np.asarray(jnp.argmax(logits[0], axis=-1))
+        for i in range(k):
+            if tgt_choice[base + i] == proposal[i]:
+                n_accept += 1
+            else:
+                break
+        stats.accepted += n_accept
+        toks.extend(proposal[:n_accept])
+        # bonus token: target's own prediction at the divergence point
+        bonus = int(tgt_choice[base + n_accept])
+        toks.append(bonus)
+        stats.bonus += 1
+        if len(toks) - len(prompt) >= max_new_tokens:
+            break
+    new = toks[len(prompt):len(prompt) + max_new_tokens]
+    return np.asarray(new, np.int32), stats
+
+
+def spec_decode_sampled(target_fwd: Forward, draft_fwd: Forward,
+                        prompt: np.ndarray, key, *, k: int = 5,
+                        max_new_tokens: int = 32,
+                        temperature: float = 1.0
+                        ) -> tuple[np.ndarray, SpecStats]:
+    """Stochastic speculative sampling with the p/q acceptance rule —
+    distributionally equivalent to sampling from the target alone."""
+    toks = list(int(t) for t in prompt)
+    stats = SpecStats()
+
+    def probs(fwd, seq):
+        lg = fwd(jnp.asarray([seq], jnp.int32))[0].astype(jnp.float32)
+        return jax.nn.softmax(lg / temperature, axis=-1)
+
+    while len(toks) - len(prompt) < max_new_tokens:
+        stats.iterations += 1
+        d = list(toks)
+        qs = []
+        for _ in range(k):
+            q = probs(draft_fwd, d)[-1]
+            key, kk = jax.random.split(key)
+            t = int(jax.random.categorical(kk, jnp.log(q + 1e-30)))
+            qs.append((t, q))
+            d.append(t)
+        stats.proposed += k
+        p_all = probs(target_fwd, d)
+        base = len(toks) - 1
+        n_accept = 0
+        for i, (t, q) in enumerate(qs):
+            p = p_all[base + i]
+            key, kk = jax.random.split(key)
+            r = float(jax.random.uniform(kk))
+            if r < min(1.0, float(p[t]) / max(float(q[t]), 1e-30)):
+                n_accept += 1
+            else:
+                # resample from max(0, p - q) normalized
+                resid = jnp.maximum(p - q, 0.0)
+                resid = resid / jnp.maximum(resid.sum(), 1e-30)
+                key, kk = jax.random.split(key)
+                bonus = int(jax.random.categorical(
+                    kk, jnp.log(resid + 1e-30)))
+                break
+        stats.accepted += n_accept
+        toks.extend(t for t, _ in qs[:n_accept])
+        if n_accept == k:       # all accepted: sample bonus from target
+            key, kk = jax.random.split(key)
+            bonus = int(jax.random.categorical(
+                kk, jnp.log(p_all[base + k] + 1e-30)))
+        toks.append(bonus)
+        stats.bonus += 1
+    new = toks[len(prompt):len(prompt) + max_new_tokens]
+    return np.asarray(new, np.int32), stats

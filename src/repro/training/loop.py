@@ -1,0 +1,152 @@
+"""Training loop: jit'd step (with microbatch gradient accumulation and
+optional int8 gradient compression), sharded via pjit when a mesh is
+given, checkpoint/resume, and failure-injection hooks for the
+fault-tolerance tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.parallel import compression
+from repro.parallel.sharding import data_shardings, params_shardings
+from .optimizer import OptimizerConfig, apply_opt, init_opt
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    ckpt_keep: int = 3
+    grad_compression: bool = False
+    seed: int = 0
+
+
+def make_train_step(mcfg: ModelConfig, ocfg: OptimizerConfig,
+                    tcfg: TrainConfig) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    n_micro = tcfg.microbatches
+
+    def loss_of(params, batch):
+        return api.loss_fn(mcfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                    *x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), split)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = lsum / n_micro
+
+        if tcfg.grad_compression:
+            ef = opt_state["error_feedback"]
+            grads, ef = compression.compressed_gradients(grads, ef)
+            inner = opt_state["inner"]
+        else:
+            ef = None
+            inner = opt_state["inner"]
+
+        params, inner, gnorm = apply_opt(ocfg, grads, inner, params)
+        new_state = {"inner": inner}
+        if ef is not None:
+            new_state["error_feedback"] = ef
+        elif "error_feedback" in opt_state:
+            new_state["error_feedback"] = opt_state["error_feedback"]
+        return params, new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def init_train_state(mcfg: ModelConfig, ocfg: OptimizerConfig,
+                     tcfg: TrainConfig, key) -> tuple[Params, Params]:
+    params = api.init_params(mcfg, key)
+    opt_state: dict = {"inner": init_opt(ocfg, params)}
+    if tcfg.grad_compression:
+        opt_state["error_feedback"] = \
+            compression.init_error_feedback(params)
+    return params, opt_state
+
+
+def train(mcfg: ModelConfig, ocfg: OptimizerConfig, tcfg: TrainConfig,
+          dcfg: DataConfig, *, mesh: Mesh | None = None,
+          fail_at_step: int | None = None,
+          log_fn: Callable[[str], None] = print) -> dict:
+    """Run (or resume) a training job.  Returns summary metrics.
+
+    fail_at_step: raise after that step's checkpoint (fault-injection for
+    the restart tests)."""
+    step_fn = make_train_step(mcfg, ocfg, tcfg)
+    params, opt_state = init_train_state(
+        mcfg, ocfg, tcfg, jax.random.PRNGKey(tcfg.seed))
+
+    if mesh is not None:
+        pshard = params_shardings(mesh, params)
+        oshard = jax.tree.map(
+            lambda x: NamedSharding(mesh, P(*([None] * x.ndim))),
+            opt_state)
+        params = jax.device_put(params, pshard)
+        opt_state = jax.device_put(opt_state, oshard)
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep) \
+        if tcfg.ckpt_dir else None
+    start_step = 0
+    if ckpt is not None and ckpt.latest_step() is not None:
+        (params, opt_state), meta = ckpt.restore((params, opt_state))
+        start_step = int(meta["next_step"])
+        log_fn(f"[train] resumed from step {start_step}")
+
+    data = DataPipeline(dcfg)
+    data.start(start_step)
+    losses = []
+    t0 = time.monotonic()
+    try:
+        for step in range(start_step, tcfg.steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in data.next_batch(step).items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+                l = float(metrics["loss"])
+                losses.append((step, l))
+                log_fn(f"[train] step={step} loss={l:.4f} "
+                       f"gnorm={float(metrics['grad_norm']):.3f}")
+            if ckpt is not None and (step + 1) % tcfg.ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state),
+                          meta={"next_step": step + 1})
+            if fail_at_step is not None and step + 1 >= fail_at_step:
+                raise RuntimeError(f"injected failure at step {step + 1}")
+    finally:
+        data.stop()
+    if ckpt is not None:
+        ckpt.save(tcfg.steps, (params, opt_state),
+                  meta={"next_step": tcfg.steps})
+    return {"losses": losses, "params": params,
+            "wall_s": time.monotonic() - t0,
+            "straggler_events": data.straggler_events}

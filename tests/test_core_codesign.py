@@ -1,0 +1,106 @@
+"""End-to-end Mozart DSE: GA fusion, SA pool, full codesign, policy."""
+import json
+
+import pytest
+
+from repro.core import operators
+from repro.core.chiplets import Chiplet, default_pool
+from repro.core.codesign import (best_homogeneous_design,
+                                 design_for_network, run_codesign,
+                                 unconstrained_design)
+from repro.core.fusion import (GAConfig, Requirement, forced_boundaries,
+                               groups_from_genome, optimize_fusion,
+                               _roofline_seed)
+from repro.core.policy import policy_from_design
+from repro.core.pool import SAConfig, anneal_pool, evaluate_pool
+
+GA_SMALL = GAConfig(population=5, generations=2)
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    ws = operators.paper_workloads(seq=512)
+    return {"resnet50": ws["resnet50"],
+            "opt66b_decode": ws["opt66b_decode"]}
+
+
+def test_forced_boundaries_respected(graphs):
+    g = graphs["opt66b_decode"]
+    seed = _roofline_seed(g, default_pool(), fuse=True)
+    groups = groups_from_genome(g, seed)
+    # ops with different repeat counts can never share a group
+    for gr in groups:
+        assert len({gr.repeat}) == 1
+    flat = [o.name for gr in groups for o in gr.ops]
+    assert flat == [o.name for o in g.operators]
+
+
+def test_ga_feasible_and_latency_constraint(graphs):
+    g = graphs["resnet50"]
+    res = optimize_fusion(g, default_pool(), objective="edp",
+                          cfg=GA_SMALL)
+    assert res is not None and res.value > 0
+    # latency-constrained: 33ms AV deadline
+    res_c = optimize_fusion(g, default_pool(), objective="edp",
+                            req=Requirement(e2e=0.033),
+                            cfg=GAConfig(population=5, generations=2,
+                                         fixed_batch=1))
+    assert res_c is not None
+    assert res_c.solution.delay_e2e <= 0.033 + 1e-9
+
+
+def test_pool_dominates_single_sku(graphs):
+    """The 8-SKU pool's optimum can't be (much) worse than the best
+    single SKU (GA noise tolerance 5%)."""
+    g = graphs["opt66b_decode"]
+    homog = best_homogeneous_design(g, objective="edp",
+                                    ga=GAConfig(population=4,
+                                                generations=1))
+    pool = optimize_fusion(g, default_pool(), objective="edp",
+                           cfg=GAConfig(population=8, generations=4))
+    assert pool.value <= homog.fusion.value * 1.05
+
+
+def test_anneal_pool_runs_and_improves(graphs):
+    sa = SAConfig(iterations=3, inner_ga=GAConfig(population=4,
+                                                  generations=1))
+    res = anneal_pool(graphs, objective="energy", pool_size=4, cfg=sa)
+    assert len(res.pool) == 4
+    assert len(set(res.pool)) == len(res.pool)     # distinct SKUs
+    assert res.per_network and res.score > 0
+
+
+def test_run_codesign_end_to_end(graphs):
+    out = run_codesign(graphs, objective="energy", pool_size=4,
+                       sa=SAConfig(iterations=2,
+                                   inner_ga=GAConfig(population=4,
+                                                     generations=1)),
+                       final_ga=GA_SMALL)
+    assert set(out.designs) == set(graphs)
+    reuse = out.chiplet_reuse()
+    assert reuse and max(reuse.values()) >= 1
+    for d in out.designs.values():
+        assert d.pnr.placements
+        assert d.fusion.value > 0
+
+
+def test_policy_extraction(graphs):
+    d = design_for_network(graphs["opt66b_decode"], default_pool(),
+                           objective="energy", ga=GA_SMALL)
+    pol = policy_from_design(d)
+    blob = json.loads(pol.to_json())
+    assert blob["network"] == d.network
+    assert blob["operators"]
+    assert set(blob["fusion"]) == {"flash_attention", "fused_mlp",
+                                   "fused_norm"}
+    # Insight 2 in the policy: attention batch <= projection batch
+    assert pol.batch_agnostic_batch <= pol.batch_sensitive_batch
+
+
+def test_unconstrained_at_least_as_good(graphs):
+    g = graphs["resnet50"]
+    pool8 = optimize_fusion(g, default_pool(), objective="energy",
+                            cfg=GA_SMALL)
+    unc = unconstrained_design(g, objective="energy",
+                               ga=GAConfig(population=8, generations=3))
+    assert unc.fusion.value <= pool8.value * 1.10   # search-noise slack

@@ -1,0 +1,102 @@
+"""Property tests for the iso-latency / modified convex hull layer —
+the paper's Algorithm 1 against brute force, via hypothesis."""
+import math
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chiplets import Chiplet
+from repro.core.convexhull import (DynamicLowerHull, LiChaoTree, Line,
+                                   default_latency_grid, solve_pipeline,
+                                   solve_pipeline_bruteforce,
+                                   stage_envelope,
+                                   stage_envelope_bruteforce)
+from repro.core.memory import HBM3
+from repro.core.perfmodel import StageConfig, StageOption
+
+
+def mk_option(rng) -> StageOption:
+    cfg = StageConfig(Chiplet(), HBM3, 1, 1, 1)
+    return StageOption(t_cmp=rng.uniform(0.05, 10.0),
+                       e_dyn=rng.uniform(0.1, 100.0),
+                       p_static=rng.uniform(0.01, 5.0),
+                       hw_cost_usd=rng.uniform(1.0, 1000.0),
+                       cfg=cfg)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000))
+def test_envelope_engines_match_bruteforce(seed):
+    rng = random.Random(seed)
+    opts = [mk_option(rng) for _ in range(rng.randint(1, 40))]
+    lat = sorted(rng.uniform(0.01, 15.0)
+                 for _ in range(rng.randint(1, 40)))
+    bf = stage_envelope_bruteforce(opts, lat)
+    for engine in ("hull", "lichao"):
+        env = stage_envelope(opts, lat, engine=engine)
+        for (v1, _), (v2, _) in zip(env, bf):
+            if math.isinf(v2):
+                assert math.isinf(v1)
+            else:
+                assert math.isclose(v1, v2, rel_tol=1e-9), engine
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000),
+       st.sampled_from(["energy", "edp", "energy_cost", "edp_cost"]))
+def test_solve_pipeline_matches_bruteforce(seed, objective):
+    rng = random.Random(seed)
+    stages = [[mk_option(rng) for _ in range(rng.randint(1, 15))]
+              for _ in range(rng.randint(1, 5))]
+    lat = sorted(rng.uniform(0.01, 15.0)
+                 for _ in range(rng.randint(1, 25)))
+    a = solve_pipeline(stages, lat, objective=objective)
+    b = solve_pipeline_bruteforce(stages, lat, objective=objective)
+    assert (a is None) == (b is None)
+    if a is not None:
+        assert math.isclose(a.value, b.value, rel_tol=1e-9)
+        assert math.isclose(a.T, b.T, rel_tol=1e-9)
+
+
+def test_constraints_respected():
+    rng = random.Random(0)
+    stages = [[mk_option(rng) for _ in range(10)] for _ in range(3)]
+    lat = sorted(rng.uniform(0.01, 20.0) for _ in range(50))
+    sol = solve_pipeline(stages, lat, objective="energy", max_e2e=30.0)
+    if sol is not None:
+        assert sol.delay_e2e <= 30.0 + 1e-12
+    sol2 = solve_pipeline(stages, lat, objective="energy",
+                          max_interval=0.001)
+    assert sol2 is None or sol2.T <= 0.001
+
+
+def test_repeat_scaling_changes_objective():
+    rng = random.Random(1)
+    base = [mk_option(rng) for _ in range(5)]
+    from repro.core.perfmodel import scale_option
+    scaled = [scale_option(o, 4) for o in base]
+    lat = [max(o.t_cmp for o in base) * 2]
+    a = solve_pipeline([base], lat, objective="energy")
+    b = solve_pipeline([scaled], lat, objective="energy", n_stages=4)
+    assert b.energy_per_sample == pytest.approx(4 * a.energy_per_sample)
+    assert b.delay_e2e == pytest.approx(4 * a.delay_e2e)
+
+
+def test_dynamic_hull_dominated_line_dropped():
+    h = DynamicLowerHull()
+    h.insert(Line(1.0, 0.0))
+    h.insert(Line(-1.0, 10.0))
+    h.insert(Line(0.0, 100.0))    # dominated everywhere on envelope
+    for x in (0.0, 2.0, 5.0, 8.0):
+        want = min(x, -x + 10.0, 100.0)
+        assert h.query(x).at(x) == pytest.approx(want)
+
+
+def test_default_latency_grid_covers_feasible_range():
+    rng = random.Random(2)
+    stages = [[mk_option(rng) for _ in range(8)] for _ in range(3)]
+    grid = default_latency_grid(stages, n=32)
+    assert min(grid) <= min(o.t_cmp for opts in stages for o in opts)
+    bottleneck = max(min(o.t_cmp for o in opts) for opts in stages)
+    assert any(t >= bottleneck for t in grid)

@@ -1,0 +1,175 @@
+"""Mozart analytical core: operator IR, perf model, cost model, P&R."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel, operators
+from repro.core.chiplets import Chiplet, default_pool, full_design_space
+from repro.core.memory import DDR5, HBM3, MEMORY_POOL
+from repro.core.operators import (BATCH_AGNOSTIC, BATCH_SENSITIVE, OPT_66B,
+                                  lm_operator_graph, paper_workloads)
+from repro.core.perfmodel import (StageConfig, enumerate_stage_options,
+                                  evaluate_group, gpu_eval, is_memory_bound,
+                                  scale_option)
+from repro.core.pnr import place_and_route
+
+
+# --- operator IR ------------------------------------------------------------
+
+def test_paper_workloads_shapes():
+    ws = paper_workloads()
+    assert set(ws) >= {"resnet50", "mobilenetv3", "efficientnet",
+                       "replknet31b", "vit_b16", "opt66b_prefill",
+                       "opt66b_decode"}
+    for name, g in ws.items():
+        assert g.total_flops > 0, name
+        assert g.total_weight_bytes > 0, name
+        assert len(g.operators) == len(g.repeats)
+
+
+def test_opt66b_flops_magnitude():
+    # prefill of 2048 tokens on ~65e9 matmul params: ~2*N*D FLOPs
+    g = lm_operator_graph(OPT_66B, 2048, "prefill")
+    assert 2.0e14 < g.total_flops < 4.5e14
+
+
+def test_decode_graph_is_memory_heavy():
+    gp = lm_operator_graph(OPT_66B, 2048, "prefill")
+    gd = lm_operator_graph(OPT_66B, 2048, "decode", cache_len=2048)
+    ai_p = gp.total_flops / sum(o.dram_bytes(1) * r for o, r in
+                                zip(gp.operators, gp.repeats))
+    ai_d = gd.total_flops / sum(o.dram_bytes(1) * r for o, r in
+                                zip(gd.operators, gd.repeats))
+    assert ai_p > 50 * ai_d      # decode is drastically less intense
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64))
+def test_batch_scaling_classes(batch):
+    ops = {o.name: o for o in operators.lm_layer_operators(
+        OPT_66B, seq=1, cache_len=2048, phase="decode")}
+    att, mlp = ops["attention"], ops["mlp"]
+    assert att.batch_scaling == BATCH_AGNOSTIC
+    assert mlp.batch_scaling == BATCH_SENSITIVE
+    # intensity: constant for attention, growing for mlp
+    assert att.arithmetic_intensity(batch) == pytest.approx(
+        att.arithmetic_intensity(1), rel=1e-6)
+    if batch > 1:
+        assert mlp.arithmetic_intensity(batch) > \
+            mlp.arithmetic_intensity(1)
+
+
+def test_moe_weight_reuse_divisor():
+    spec = operators.LMSpec(name="moe", n_layers=2, d_model=512,
+                            n_heads=8, kv_heads=8, d_ff=1024, vocab=1000,
+                            n_experts=8, top_k=2)
+    g = lm_operator_graph(spec, 128, "prefill")
+    routed = [o for o in g.operators if o.name == "routed_experts"][0]
+    assert routed.weight_reuse_divisor == pytest.approx(4.0)
+    # at batch 1 only ~1/4 of expert weights are touched
+    assert routed.dram_bytes(1) < routed.weight_bytes
+
+
+# --- perf model ---------------------------------------------------------------
+
+def test_roofline_latency_monotone_in_bandwidth():
+    op = operators.lm_layer_operators(OPT_66B, 1, 2048, "decode")[2]
+    c = Chiplet("OS", 2, 4, "2.5D")
+    t = []
+    for units in (1, 2, 4):
+        so = evaluate_group([op], StageConfig(c, HBM3, units, 1, 1))
+        t.append(so.t_cmp)
+    assert t[0] >= t[1] >= t[2]
+
+
+def test_small_op_underutilizes_big_array():
+    op = operators.lm_layer_operators(OPT_66B, 1, 2048, "decode")[2]
+    small = evaluate_group([op], StageConfig(Chiplet("WS", 1, 1, "2D"),
+                                             HBM3, 4, 1, 1))
+    big = evaluate_group([op], StageConfig(Chiplet("WS", 4, 1, "2.5D"),
+                                           HBM3, 4, 1, 1))
+    # the big array cannot be proportionally faster on a GEMV
+    assert big.t_cmp > small.t_cmp / 64
+
+
+def test_is_memory_bound_classifier():
+    ops = {o.name: o for o in operators.lm_layer_operators(
+        OPT_66B, 1, 2048, "decode")}
+    c = Chiplet("WS", 3, 4, "2.5D")
+    assert is_memory_bound(ops["mlp"], c, HBM3, batch=1)       # GEMV
+    prefill_ops = {o.name: o for o in operators.lm_layer_operators(
+        OPT_66B, 2048, 0, "prefill")}
+    assert not is_memory_bound(prefill_ops["mlp"], c, HBM3, batch=4)
+
+
+def test_fusion_reduces_dram_traffic():
+    ops = operators.lm_layer_operators(OPT_66B, 128, 0, "prefill")[:4]
+    cfg = StageConfig(Chiplet("WS", 4, 16, "2.5D"), HBM3, 2, 1, 1)
+    fused = evaluate_group(ops, cfg)
+    separate = [evaluate_group([o], cfg) for o in ops]
+    assert fused.e_dyn <= sum(s.e_dyn for s in separate) + 1e-12
+
+
+def test_enumerate_stage_options_nonempty_and_priced():
+    ops = operators.lm_layer_operators(OPT_66B, 128, 0, "prefill")[:2]
+    opts = enumerate_stage_options(ops, default_pool())
+    assert len(opts) > 50
+    priced = costmodel.price_stage_options(opts)
+    assert all(o.hw_cost_usd > 0 for o in priced)
+
+
+def test_gpu_eval_positive():
+    g = paper_workloads()["resnet50"]
+    lat, e = gpu_eval(g.operators, g.repeats, batch=1)
+    assert lat > 0 and e > 0
+
+
+# --- cost model ---------------------------------------------------------------
+
+def test_yield_decreases_with_area():
+    ys = [costmodel.die_yield(a) for a in (10, 50, 200, 800)]
+    assert ys == sorted(ys, reverse=True)
+    assert 0 < ys[-1] < ys[0] <= 1.0
+
+
+def test_die_cost_superlinear_in_area():
+    # cost(2A) > 2*cost(A): the economic case for disaggregation [24]
+    assert costmodel.die_cost(400.0) > 2.0 * costmodel.die_cost(200.0)
+
+
+def test_nre_amortization():
+    ops = operators.lm_layer_operators(OPT_66B, 128, 0, "prefill")[:2]
+    opts = costmodel.price_stage_options(
+        enumerate_stage_options(ops, default_pool()[:2]))[:3]
+    lone = costmodel.system_cost(opts, volume=1e6, n_networks_sharing={})
+    shared = costmodel.system_cost(
+        opts, volume=1e6,
+        n_networks_sharing={o.cfg.chiplet.label: 200 for o in opts})
+    assert shared.nre_per_unit < lone.nre_per_unit
+    highvol = costmodel.system_cost(opts, volume=3e6,
+                                    n_networks_sharing={})
+    assert highvol.nre_per_unit < lone.nre_per_unit
+
+
+# --- P&R ----------------------------------------------------------------------
+
+def test_pnr_no_overlap_and_fits():
+    ops = operators.lm_layer_operators(OPT_66B, 128, 0, "prefill")[:3]
+    opts = costmodel.price_stage_options(
+        enumerate_stage_options(ops, default_pool()[:3]))
+    stages = opts[:6]
+    r = place_and_route(stages)
+    assert r.placements
+    for i, a in enumerate(r.placements):
+        assert a.x >= -1e-9 and a.y >= -1e-9
+        assert a.x + a.w <= r.width + 1e-6
+        assert a.y + a.h <= r.height + 1e-6
+        for b in r.placements[i + 1:]:
+            overlap_x = min(a.x + a.w, b.x + b.w) - max(a.x, b.x)
+            overlap_y = min(a.y + a.h, b.y + b.h) - max(a.y, b.y)
+            assert not (overlap_x > 1e-6 and overlap_y > 1e-6), \
+                (a, b)
+    # deterministic
+    r2 = place_and_route(stages)
+    assert r2.area_mm2 == r.area_mm2 and r2.wirelength_mm == r.wirelength_mm

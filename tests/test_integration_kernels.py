@@ -1,0 +1,93 @@
+"""Integration: the Pallas kernels driven THROUGH the model stack (the
+fusion flags the Mozart policy layer toggles), interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import api, rglru, rwkv6, transformer as T
+from repro.models.config import ModelConfig
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+            d_ff=128, vocab=97, dtype="float32", param_dtype="float32",
+            scan_min_layers=2)
+
+
+def test_model_with_flash_attention_kernel():
+    cfg_ref = ModelConfig(name="ref", attn_impl="einsum", **BASE)
+    cfg_fl = cfg_ref.replace(attn_impl="flash")
+    params = T.init_params(cfg_ref, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 97)
+    a = T.forward(cfg_ref, params, toks)
+    b = T.forward(cfg_fl, params, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_model_with_flash_attention_swa():
+    cfg_ref = ModelConfig(name="ref", attn_impl="einsum", window=8, **BASE)
+    cfg_fl = cfg_ref.replace(attn_impl="flash")
+    params = T.init_params(cfg_ref, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 97)
+    a = T.forward(cfg_ref, params, toks)
+    b = T.forward(cfg_fl, params, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_kernel_matches_model_scan():
+    """The rglru_scan Pallas kernel computes the same recurrence the
+    model's associative scan does."""
+    from repro.kernels.rglru_scan.ops import rglru_scan as kscan
+    a = jax.random.uniform(jax.random.PRNGKey(0), (2, 40, 64),
+                           minval=0.05, maxval=0.98)
+    b = jax.random.normal(jax.random.PRNGKey(1), (2, 40, 64))
+    h0 = jnp.zeros((2, 64))
+    model_out = rglru.rglru_scan(a, b, h0)
+    kernel_out = kscan(a, b, h0, bs=8, bw=32)
+    np.testing.assert_allclose(np.asarray(model_out),
+                               np.asarray(kernel_out),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_kernel_matches_model_chunked():
+    from repro.kernels.wkv6.ops import wkv6 as kwkv
+    B, S, H, D = 2, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    r = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, D))) * 0.9 + 0.05
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    s0 = jnp.zeros((B, H, D, D))
+    model_out, _ = rwkv6.wkv_chunked(r, k, v, w, u, s0, chunk=8)
+    rf = r.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    wf = jnp.log(w).transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    uf = jnp.broadcast_to(u[None], (B, H, D)).reshape(B * H, 1, D)
+    sf = s0.reshape(B * H, D, D)
+    kernel_out = kwkv(rf, kf, vf, wf, uf, sf, chunk=8)
+    kernel_out = kernel_out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(model_out),
+                               np.asarray(kernel_out),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_mlp_kernel_matches_model_experts():
+    """The fused grouped-MLP kernel reproduces the model's expert math."""
+    from repro.kernels.moe_mlp.ops import moe_mlp
+    cfg = ModelConfig(name="m", n_experts=4, top_k=2,
+                      capacity_factor=4.0, **BASE)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    seg = params["segments"][0]["kind_moe"]["moe"]
+    wi = jax.tree.map(lambda a: a[0], seg["experts_in"])
+    wg = jax.tree.map(lambda a: a[0], seg["experts_gate"])
+    wo = jax.tree.map(lambda a: a[0], seg["experts_out"])
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 16, 64)) * 0.5
+    want = jnp.einsum("ecf,efd->ecd",
+                      jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, wg))
+                      * jnp.einsum("ecd,edf->ecf", x, wi), wo)
+    got = moe_mlp(x, wg, wi, wo, swiglu=True, bt=8, bf=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

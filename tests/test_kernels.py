@@ -1,0 +1,106 @@
+"""Pallas kernel validation (interpret mode on CPU): shape/dtype sweeps +
+hypothesis-driven shapes, all against the pure-jnp ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_mlp.ops import moe_mlp
+from repro.kernels.moe_mlp.ref import moe_mlp_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+def _flash_case(B, Sq, Sk, H, Hkv, hd, causal, window, dt, bq=32, bk=32):
+    ks = jax.random.split(jax.random.PRNGKey(Sq * 7 + Sk), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dt)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, hd), dt)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, hd), dt)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=bq, bk=bk)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
+    ref = attention_ref(qf, kf, vf, causal=causal, window=window) \
+        .reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    tol = 2.5e-2 if dt == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("case", [
+    (2, 64, 64, 4, 2, 32, True, None, jnp.float32),
+    (1, 100, 100, 4, 1, 64, True, None, jnp.float32),     # ragged + MQA
+    (2, 128, 256, 8, 8, 32, True, 40, jnp.float32),       # SWA window
+    (1, 1, 96, 4, 2, 32, False, None, jnp.float32),       # decode shape
+    (2, 64, 64, 4, 4, 32, True, None, jnp.bfloat16),      # bf16
+    (1, 32, 32, 2, 2, 128, True, None, jnp.float32),      # big head dim
+])
+def test_flash_attention_cases(case):
+    _flash_case(*case)
+
+
+@settings(max_examples=8, deadline=None)
+@given(sq=st.integers(1, 80), sk=st.integers(8, 120),
+       group=st.sampled_from([1, 2, 4]),
+       causal=st.booleans())
+def test_flash_attention_hypothesis(sq, sk, group, causal):
+    if causal and sq > sk:
+        sq = sk
+    _flash_case(1, sq, sk, 2 * group, 2, 16, causal, None, jnp.float32,
+                bq=16, bk=16)
+
+
+@pytest.mark.parametrize("B,S,W,bs,bw", [
+    (2, 64, 128, 16, 64), (1, 100, 96, 32, 32), (3, 7, 250, 4, 128)])
+def test_rglru_scan_kernel(B, S, W, bs, bw):
+    ks = jax.random.split(jax.random.PRNGKey(S), 3)
+    a = jax.random.uniform(ks[0], (B, S, W), minval=0.1, maxval=0.99)
+    b = jax.random.normal(ks[1], (B, S, W))
+    h0 = jax.random.normal(ks[2], (B, W))
+    np.testing.assert_allclose(np.asarray(rglru_scan(a, b, h0, bs=bs,
+                                                     bw=bw)),
+                               np.asarray(rglru_scan_ref(a, b, h0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("BH,S,D,C", [(3, 64, 32, 16), (2, 50, 64, 16),
+                                      (1, 16, 16, 8)])
+def test_wkv6_kernel(BH, S, D, C):
+    ks = jax.random.split(jax.random.PRNGKey(S), 6)
+    r = jax.random.normal(ks[0], (BH, S, D))
+    k = jax.random.normal(ks[1], (BH, S, D))
+    v = jax.random.normal(ks[2], (BH, S, D))
+    logw = -jax.nn.softplus(jax.random.normal(ks[3], (BH, S, D)))
+    u = jax.random.normal(ks[4], (BH, 1, D)) * 0.1
+    s0 = jax.random.normal(ks[5], (BH, D, D)) * 0.1
+    out = wkv6(r, k, v, logw, u, s0, chunk=C)
+    ref, _ = wkv6_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("E,C,d,F,sw,dt", [
+    (4, 32, 64, 128, True, jnp.float32),
+    (1, 100, 32, 200, False, jnp.float32),     # dense-MLP degenerate case
+    (2, 16, 128, 96, True, jnp.float32),
+    (2, 32, 64, 128, True, jnp.bfloat16),
+])
+def test_moe_mlp_kernel(E, C, d, F, sw, dt):
+    ks = jax.random.split(jax.random.PRNGKey(E * C), 4)
+    x = (jax.random.normal(ks[0], (E, C, d)) * 0.5).astype(dt)
+    wg = (jax.random.normal(ks[1], (E, d, F)) * 0.1).astype(dt)
+    wi = (jax.random.normal(ks[2], (E, d, F)) * 0.1).astype(dt)
+    wo = (jax.random.normal(ks[3], (E, F, d)) * 0.1).astype(dt)
+    out = moe_mlp(x, wg, wi, wo, swiglu=sw, bt=16, bf=64)
+    ref = moe_mlp_ref(x, wg, wi, wo, swiglu=sw)
+    tol = 2e-2 if dt == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,31 @@
+"""Multi-device tests run in a subprocess (device count is locked at
+first jax init, so the 8-device cases can't share this process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", script)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=ROOT)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\n" \
+                                f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_multidevice_parallelism():
+    stdout = _run("parallel_prog.py")
+    assert "ALL_PARALLEL_OK" in stdout
+    for marker in ("tp_dp_forward ok", "sharded_decode ok",
+                   "pipeline_parallel ok", "optimizer_shardings ok",
+                   "elastic_reshard ok"):
+        assert marker in stdout

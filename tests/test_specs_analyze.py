@@ -1,0 +1,86 @@
+"""launch/ specs + roofline analysis units (no 512-device init here —
+dryrun.py is exercised via subprocess in test_parallel.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.launch import analyze
+from repro.launch.specs import (batch_specs, cache_specs, decode_specs,
+                                input_specs, params_specs)
+
+
+def test_input_specs_train_shapes():
+    out = input_specs("smollm-135m", "train_4k")
+    b = out["batch"]
+    assert b["tokens"].shape == (256, 4096)
+    assert b["labels"].shape == (256, 4096)
+
+
+def test_input_specs_decode_shapes():
+    out = input_specs("qwen2.5-32b", "decode_32k")
+    assert out["tokens"].shape == (128, 1)
+    cache = out["cache"]
+    k = cache["segments"][0]["k"]
+    assert k.shape == (64, 128, 32768, 8, 128)   # (L, B, C, kvh, hd)
+
+
+def test_swa_cache_is_ring_capped():
+    out = input_specs("h2o-danube-1.8b", "long_500k")
+    k = out["cache"]["segments"][0]["k"]
+    assert k.shape[2] == 4096        # window, not 524288
+
+
+def test_mla_cache_is_latent():
+    out = input_specs("deepseek-v3-671b", "decode_32k")
+    lat = out["cache"]["segments"][1]["latent"]
+    # latent width = kv_rank + rope_dim = 576, per token
+    assert lat.shape[-1] == 576
+
+
+def test_rwkv_state_o1():
+    out = input_specs("rwkv6-3b", "long_500k")
+    wkv = out["cache"]["layers"][0]["wkv"]
+    assert wkv.shape == (1, 40, 64, 64)   # O(1) in sequence length
+
+
+def test_vlm_and_whisper_stub_embeds():
+    v = input_specs("qwen2-vl-2b", "train_4k")["batch"]
+    assert "embeds" in v and v["embeds"].shape[-1] == 1536
+    assert v["embeds"].shape[1] + v["tokens"].shape[1] == 4096
+    w = input_specs("whisper-base", "train_4k")["batch"]
+    assert w["embeds"].shape == (256, 4096, 512)
+    assert w["tokens"].shape == (256, 1024)
+
+
+SAMPLE_HLO = """
+ %all-reduce.1 = f32[8,512]{1,0} all-reduce(%dot), channel_id=1
+ %ag = bf16[16,1024]{1,0} all-gather(%p0), dimensions={0}
+ %rs.5 = (f32[4,4]{1,0}, f32[2,2]{1,0}) reduce-scatter(%x, %y), dims={0}
+ %cp-start = bf16[128]{0} collective-permute-start(%z)
+ %cp-done = bf16[128]{0} collective-permute-done(%cp-start)
+ %notacoll = f32[9,9]{1,0} dot(%a, %b)
+"""
+
+
+def test_collective_bytes_parser():
+    out = analyze.collective_bytes(SAMPLE_HLO)
+    assert out["all-reduce"] == 8 * 512 * 4
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["reduce-scatter"] == 4 * 4 * 4 + 2 * 2 * 4
+    assert out["collective-permute"] == 128 * 2     # start only, not done
+    assert out["total"] == (out["all-reduce"] + out["all-gather"]
+                            + out["reduce-scatter"]
+                            + out["collective-permute"])
+
+
+def test_model_flops_accounting():
+    cfg = configs.get_config("mixtral-8x7b")
+    ps = params_specs(cfg)
+    shape = configs.SHAPES["train_4k"]
+    mf = analyze.model_flops_for(cfg, shape, ps)
+    # active params ~ 13B of 47B; 6*N*D with D = 2^20 tokens
+    n_active = mf / (6 * shape.global_batch * shape.seq_len)
+    assert 11e9 < n_active < 16e9
+    mf_dec = analyze.model_flops_for(cfg, configs.SHAPES["decode_32k"], ps)
+    assert mf_dec == pytest.approx(2 * n_active * 128, rel=1e-6)

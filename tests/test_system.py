@@ -1,0 +1,71 @@
+"""End-to-end behaviour tests for the paper's system: the full Mozart
+codesign stack feeding an execution policy into the JAX substrate."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import operators
+from repro.core.codesign import design_for_network, run_codesign
+from repro.core.fusion import GAConfig, Requirement
+from repro.core.policy import policy_from_design
+from repro.core.pool import SAConfig
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+def test_codesign_to_execution_policy_to_substrate():
+    """Paper pipeline end to end: operator graph -> 4-layer DSE ->
+    execution policy -> policy-configured substrate runs."""
+    graph = operators.lm_operator_graph(
+        operators.OPT_1_3B, seq=256, phase="decode", cache_len=256)
+    design = design_for_network(
+        graph, None or __import__(
+            "repro.core.chiplets", fromlist=["default_pool"]
+        ).default_pool(),
+        objective="energy_cost",
+        req=Requirement(tpot=0.15),
+        ga=GAConfig(population=5, generations=2))
+    assert design is not None
+    assert design.pnr.placements
+    pol = policy_from_design(design)
+    blob = json.loads(pol.to_json())
+
+    # Insight 2 must show up in the deployed policy
+    assert pol.batch_agnostic_batch <= pol.batch_sensitive_batch
+
+    # apply the policy to the substrate: fusion flags select kernels,
+    # decode batch comes from the policy's batching decision
+    flags = pol.fusion_flags()
+    attn_impl = "flash" if flags["flash_attention"] else "einsum"
+    cfg = ModelConfig(name="deploy", n_layers=2, d_model=64, n_heads=4,
+                      kv_heads=2, head_dim=16, d_ff=128, vocab=128,
+                      dtype="float32", param_dtype="float32",
+                      attn_impl=attn_impl, scan_min_layers=2)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    b = max(1, min(pol.batch_agnostic_batch, 4))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, 16), 0,
+                              cfg.vocab)
+    logits = api.forward(cfg, params, {"tokens": toks})
+    assert logits.shape == (b, 16, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_full_codesign_small():
+    ws = operators.paper_workloads(seq=256)
+    nets = {"resnet50": ws["resnet50"],
+            "opt66b_decode": ws["opt66b_decode"]}
+    out = run_codesign(nets, objective="edp", pool_size=4,
+                       sa=SAConfig(iterations=2,
+                                   inner_ga=GAConfig(population=4,
+                                                     generations=1)),
+                       final_ga=GAConfig(population=5, generations=2))
+    assert set(out.designs) == set(nets)
+    # heterogeneity: the two networks should not share every stage SKU
+    skus = {n: {o.cfg.chiplet.label
+                for o in d.fusion.solution.stages}
+            for n, d in out.designs.items()}
+    assert skus["resnet50"] or skus["opt66b_decode"]
+    # ecosystem reuse is reported
+    assert out.chiplet_reuse()
