@@ -1,0 +1,76 @@
+"""Codesign-search throughput: fixed-seed `anneal_pool` wall-clock, seed
+implementation (scalar perf model, hull solver, no cross-call caching)
+vs. the cached/vectorized evaluation engine.
+
+Both runs must return the identical best pool, score, and per-network
+stage configurations — the engine is a pure acceleration.  Run as a
+module (`PYTHONPATH=src python -m benchmarks.bench_codesign_search`) or
+via benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import engine, operators
+from repro.core.fusion import GAConfig
+from repro.core.pool import SAConfig, anneal_pool
+
+from .common import FAST, fmt
+
+SA_ITERATIONS = 4 if FAST else 10
+
+
+def _workload():
+    ws = operators.paper_workloads(seq=512)
+    return {"resnet50": ws["resnet50"],
+            "opt66b_decode": ws["opt66b_decode"]}
+
+
+def _run_once(graphs):
+    engine.clear_all_caches()
+    sa = SAConfig(iterations=SA_ITERATIONS,
+                  inner_ga=GAConfig(population=6, generations=2))
+    t0 = time.perf_counter()
+    res = anneal_pool(graphs, objective="energy", pool_size=4, cfg=sa,
+                      final_ga=GAConfig(population=10, generations=10))
+    return (time.perf_counter() - t0) * 1e6, res
+
+
+def run():
+    graphs = _workload()
+    was = engine.engine_enabled()
+    try:
+        engine.set_engine_enabled(False)
+        us_seed, res_seed = _run_once(graphs)
+        engine.set_engine_enabled(True)
+        us_engine, res_engine = _run_once(graphs)
+    finally:
+        engine.set_engine_enabled(was)
+        engine.clear_all_caches()
+
+    pools_equal = [c.label for c in res_seed.pool] == \
+        [c.label for c in res_engine.pool]
+    score_equal = res_seed.score == res_engine.score
+    stages_equal = all(
+        [o.cfg.label for o in res_seed.per_network[n].solution.stages]
+        == [o.cfg.label for o in res_engine.per_network[n].solution.stages]
+        for n in graphs)
+    if not (pools_equal and score_equal and stages_equal):
+        raise AssertionError(
+            "engine changed the search result: "
+            f"pool={pools_equal} score={score_equal} stages={stages_equal}")
+
+    speedup = us_seed / max(us_engine, 1.0)
+    return [
+        ("codesign_search.seed_impl", us_seed,
+         f"score={fmt(res_seed.score)}"),
+        ("codesign_search.engine", us_engine,
+         f"score={fmt(res_engine.score)}"),
+        ("codesign_search.speedup", 0.0,
+         f"{speedup:.2f}x identical_best_design=True"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -19,6 +19,7 @@ MODULES = [
     "fig11_specdec",         # Figure 11
     "fig12_av",              # Figure 12
     "roofline",              # §Roofline (from dry-run artifacts)
+    "bench_codesign_search",  # engine speedup: cached/vectorized vs seed
 ]
 
 

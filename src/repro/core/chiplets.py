@@ -82,6 +82,16 @@ class Chiplet:
         assert self.glb_scale in GLB_SCALES
         assert self.bonding in BONDINGS
 
+    def __hash__(self):
+        # Chiplets key every evaluation-engine cache; memoize the hash
+        # (frozen -> fields never change).
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash((self.dataflow, self.pe_scale, self.glb_scale,
+                      self.bonding))
+            object.__setattr__(self, "_hash", h)
+        return h
+
     @property
     def pe_dim(self) -> int:
         return BASE_PE_DIM * 2 ** (self.pe_scale - 1)

@@ -14,6 +14,7 @@ import dataclasses
 from typing import Sequence
 
 from .chiplets import Chiplet, default_pool, full_design_space
+from .engine import DEFAULT_ENGINE, EvaluationEngine, engine_enabled
 from .fusion import (FusionResult, GAConfig, Requirement, optimize_fusion)
 from .operators import OperatorGraph
 from .pnr import PnrResult, place_and_route
@@ -57,10 +58,20 @@ class CodesignResult:
 def design_for_network(graph: OperatorGraph,
                        pool: Sequence[Chiplet],
                        objective: str = "energy",
-                       req: Requirement = Requirement(),
-                       ga: GAConfig = GAConfig()) -> BasicDesign | None:
+                       req: Requirement | None = None,
+                       ga: GAConfig | None = None,
+                       engine: EvaluationEngine | None = None
+                       ) -> BasicDesign | None:
     """Layers 2-4 for one network on a fixed chiplet pool."""
-    fr = optimize_fusion(graph, pool, objective=objective, req=req, cfg=ga)
+    req = req if req is not None else Requirement()
+    ga = ga if ga is not None else GAConfig()
+    if engine is None and engine_enabled():
+        engine = DEFAULT_ENGINE
+    if engine is not None:
+        fr = engine.evaluate_network(pool, graph, objective, req, ga)
+    else:
+        fr = optimize_fusion(graph, pool, objective=objective, req=req,
+                             cfg=ga)
     if fr is None:
         return None
     pnr = place_and_route(fr.solution.stages)
@@ -71,18 +82,24 @@ def run_codesign(networks: dict[str, OperatorGraph],
                  objective: str = "energy",
                  pool_size: int = 8,
                  reqs: dict[str, Requirement] | None = None,
-                 sa: SAConfig = SAConfig(),
-                 final_ga: GAConfig = GAConfig()) -> CodesignResult:
+                 sa: SAConfig | None = None,
+                 final_ga: GAConfig | None = None,
+                 engine: EvaluationEngine | None = None) -> CodesignResult:
     """The full four-layer Mozart flow."""
+    sa = sa if sa is not None else SAConfig()
+    final_ga = final_ga if final_ga is not None else GAConfig()
     pr: PoolResult = anneal_pool(networks, objective=objective,
                                  pool_size=pool_size, reqs=reqs, cfg=sa,
-                                 final_ga=final_ga)
+                                 final_ga=final_ga, engine=engine)
     designs: dict[str, BasicDesign] = {}
     reqs = reqs or {}
+    # The anneal's final full-budget re-eval just populated the engine
+    # cache for (pr.pool, network, final_ga), so this loop only pays for
+    # the Layer-4 P&R.
     for name, graph in networks.items():
         d = design_for_network(graph, pr.pool, objective=objective,
                                req=reqs.get(name, Requirement()),
-                               ga=final_ga)
+                               ga=final_ga, engine=engine)
         if d is not None:
             designs[name] = d
     return CodesignResult(pool=pr.pool, designs=designs, objective=objective)
@@ -90,8 +107,8 @@ def run_codesign(networks: dict[str, OperatorGraph],
 
 def unconstrained_design(graph: OperatorGraph,
                          objective: str = "energy",
-                         req: Requirement = Requirement(),
-                         ga: GAConfig = GAConfig()) -> BasicDesign | None:
+                         req: Requirement | None = None,
+                         ga: GAConfig | None = None) -> BasicDesign | None:
     """Upper bound: unlimited chiplet variety (paper's 'Heterogeneous
     BASIC (unconstrained)') — the whole 96-point design space as the pool."""
     return design_for_network(graph, full_design_space(), objective=objective,
@@ -101,7 +118,7 @@ def unconstrained_design(graph: OperatorGraph,
 def homogeneous_design(graph: OperatorGraph,
                        chiplet: Chiplet,
                        objective: str = "energy",
-                       req: Requirement = Requirement(),
+                       req: Requirement | None = None,
                        ga: GAConfig | None = None) -> BasicDesign | None:
     """Baseline: a single chiplet SKU for every stage (paper's
     'Homogeneous BASIC' / 'Homogeneous ASIC' paradigms)."""
@@ -113,7 +130,7 @@ def homogeneous_design(graph: OperatorGraph,
 def best_homogeneous_design(graph: OperatorGraph,
                             candidates: Sequence[Chiplet] | None = None,
                             objective: str = "energy",
-                            req: Requirement = Requirement(),
+                            req: Requirement | None = None,
                             ga: GAConfig | None = None) -> BasicDesign | None:
     """The best single-SKU accelerator — the fair homogeneous baseline."""
     ga = ga or GAConfig(population=6, generations=3)

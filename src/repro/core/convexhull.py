@@ -27,7 +27,10 @@ import dataclasses
 import math
 from typing import Callable, Sequence
 
-from .perfmodel import StageOption
+import numpy as np
+
+from .engine import engine_enabled
+from .perfmodel import StageOption, StageOptionSet, envelope_keep_mask
 
 
 @dataclasses.dataclass
@@ -231,19 +234,91 @@ def _cost_weight_fn(objective: str) -> Callable[[StageOption], float]:
     return lambda o: 1.0
 
 
+def _option_columns(opts: Sequence[StageOption]
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray]:
+    if isinstance(opts, StageOptionSet):
+        return opts.columns()
+    return (np.array([o.t_cmp for o in opts], dtype=np.float64),
+            np.array([o.e_dyn for o in opts], dtype=np.float64),
+            np.array([o.p_static for o in opts], dtype=np.float64),
+            np.array([o.hw_cost_usd for o in opts], dtype=np.float64))
+
+
+def _solve_pipeline_numpy(stage_options: Sequence[Sequence[StageOption]],
+                          lat: list[float], objective: str,
+                          P: int) -> PipelineSolution | None:
+    """Dense vectorized iso-latency sweep: per stage, the envelope value
+    at every T is a masked (options x latencies) array min.  Values match
+    the hull engine (same slope/intercept formulation) to the last bit;
+    ties between exactly-equal options may pick a different argmin."""
+    latv = np.asarray(lat, dtype=np.float64)
+    weighted = objective.endswith("_cost")
+    cols = []
+    for opts in stage_options:
+        if isinstance(opts, StageOptionSet):
+            if len(opts) == 0:
+                return None
+            cols.append(opts.pruned(weighted))
+            continue
+        t_cmp, e_dyn, p_static, hw = _option_columns(opts)
+        if t_cmp.size == 0:
+            return None
+        w = np.maximum(hw, 1e-9) if weighted else 1.0
+        slope, icept = p_static * w, e_dyn * w
+        idx = np.flatnonzero(envelope_keep_mask(t_cmp, slope, icept))
+        cols.append((t_cmp[idx], slope[idx], icept[idx], idx))
+    # One (sum-of-options x latencies) matrix for the whole pipeline;
+    # per-stage minima via segmented reduction.
+    tc = np.concatenate([c[0] for c in cols])
+    slope = np.concatenate([c[1] for c in cols])
+    icept = np.concatenate([c[2] for c in cols])
+    vals = slope[:, None] * latv[None, :]
+    vals += icept[:, None]
+    vals[tc[:, None] > latv[None, :]] = math.inf
+    starts = np.cumsum([0] + [c[0].size for c in cols[:-1]])
+    mins = np.minimum.reduceat(vals, starts, axis=0)
+    total = np.zeros(len(lat))
+    for row in mins:                  # per-stage add order preserved
+        total += row
+    if objective in ("edp", "edp_cost"):
+        total = total * (latv * P)
+    best_i = int(np.argmin(total))
+    if not math.isfinite(total[best_i]):
+        return None
+    best_T = lat[best_i]
+    # Second pass: recover each stage's argmin at the winning T only.
+    # Exact-tie break mirrors the hull engine: duplicate lines keep the
+    # first inserted, and insertion order is ascending t_cmp (stable).
+    best_stages = []
+    for opts, (t_cmp, slope, icept, idx) in zip(stage_options, cols):
+        v = slope * best_T + icept
+        v[t_cmp > best_T] = math.inf
+        cand = np.flatnonzero(v == v.min())
+        best_stages.append(opts[int(idx[cand[np.argmin(t_cmp[cand])]])])
+    e = sum(o.e_dyn + o.p_static * best_T for o in best_stages)
+    cost = sum(o.hw_cost_usd for o in best_stages)
+    return PipelineSolution(objective=objective, value=float(total[best_i]),
+                            T=best_T, energy_per_sample=e,
+                            delay_e2e=best_T * P, hw_cost_usd=cost,
+                            throughput=1.0 / best_T, stages=best_stages)
+
+
 def solve_pipeline(stage_options: Sequence[Sequence[StageOption]],
                    latencies: Sequence[float],
                    objective: str = "energy",
                    max_interval: float | None = None,
                    max_e2e: float | None = None,
                    n_stages: int | None = None,
-                   engine: str = "hull") -> PipelineSolution | None:
+                   engine: str = "auto") -> PipelineSolution | None:
     """Iso-latency with modified convex hull trick over a whole pipeline.
 
     objective: energy | edp | energy_cost | edp_cost.
     max_interval: TPOT-style bound on T; max_e2e: TTFT/E2E bound on P*T.
     n_stages: physical stage count (sum of repeats) when stage groups are
     compressed; defaults to len(stage_options).
+    engine: auto (vectorized NumPy when the evaluation engine is on,
+    else hull) | numpy | hull | lichao.
     """
     assert objective in ("energy", "edp", "energy_cost", "edp_cost")
     P = n_stages if n_stages is not None else len(stage_options)
@@ -254,6 +329,11 @@ def solve_pipeline(stage_options: Sequence[Sequence[StageOption]],
         lat = [t for t in lat if t * P <= max_e2e]
     if not lat or P == 0:
         return None
+
+    if engine == "auto":
+        engine = "numpy" if engine_enabled() else "hull"
+    if engine == "numpy":
+        return _solve_pipeline_numpy(stage_options, lat, objective, P)
 
     w = _cost_weight_fn(objective)
     envs = [stage_envelope(opts, lat, cost_weight=w, engine=engine)
@@ -332,11 +412,12 @@ def default_latency_grid(stage_options: Sequence[Sequence[StageOption]],
     """Geometric grid spanning [min feasible T, max useful T].  Includes
     every stage's t_cmp values (the only points where envelopes change
     shape matter beyond grid resolution)."""
-    tc = [o.t_cmp for opts in stage_options for o in opts]
-    lo, hi = min(tc), max(tc)
+    per_stage = [_option_columns(opts)[0] for opts in stage_options]
+    tc = np.concatenate(per_stage) if per_stage else np.empty(0)
+    lo, hi = float(tc.min()), float(tc.max())
     hi = max(hi, lo * 4)
     grid = {lo * (hi / lo) ** (i / (n - 1)) for i in range(n)}
     # All bottleneck candidates: the max over stages of per-stage t_cmp's.
-    grid.update(min(o.t_cmp for o in opts) for opts in stage_options)
-    grid.update(tc[:256])
+    grid.update(float(c.min()) for c in per_stage)
+    grid.update(tc[:256].tolist())
     return sorted(grid)

@@ -9,12 +9,13 @@ chiplets, over every *design* that reuses them (the ecosystem argument).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Iterable, Sequence
 
 from .chiplets import Chiplet
 from .memory import MemoryType
-from .perfmodel import StageOption
+from .perfmodel import StageConfig, StageOption
 
 # --- RE constants (14 nm class) --------------------------------------------
 WAFER_COST_USD = 4000.0
@@ -53,18 +54,27 @@ def die_cost(area_mm2: float) -> float:
     return k_die / die_yield(area_mm2) * (1.0 + TEST_COST_FRACTION)
 
 
+@functools.lru_cache(maxsize=None)
 def chiplet_re_cost(c: Chiplet) -> float:
     return die_cost(c.area_mm2) + BOND_COST_USD[c.bonding]
 
 
+@functools.lru_cache(maxsize=None)
+def _stage_hw_cost(chiplet: Chiplet, tp: int, memory: MemoryType,
+                   units: int) -> float:
+    return chiplet_re_cost(chiplet) * tp + memory.cost(units)
+
+
+def stage_hw_cost(cfg: StageConfig) -> float:
+    """Manufacturing cost of one stage config: tp chiplet dies + the
+    stage's memory subsystem (cached per distinct config)."""
+    return _stage_hw_cost(cfg.chiplet, cfg.tp, cfg.memory, cfg.mem_units)
+
+
 def price_stage_options(options: Iterable[StageOption]) -> list[StageOption]:
     """Fill hw_cost_usd: tp chiplet dies + the stage's memory subsystem."""
-    out = []
-    for o in options:
-        c = (chiplet_re_cost(o.cfg.chiplet) * o.cfg.tp
-             + o.cfg.memory.cost(o.cfg.mem_units))
-        out.append(dataclasses.replace(o, hw_cost_usd=c))
-    return out
+    return [dataclasses.replace(o, hw_cost_usd=stage_hw_cost(o.cfg))
+            for o in options]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,152 @@
+"""Cross-layer evaluation engine for the Mozart codesign stack.
+
+Three independent accelerations over the seed implementation, all
+result-preserving for a fixed seed:
+
+  * vectorization — `perfmodel.enumerate_stage_options` evaluates the
+    whole (chiplet x memory x mem_units x tp x batch) grid of a fusion
+    group with batched NumPy instead of per-option scalar math, and
+    `convexhull.solve_pipeline` sweeps the iso-latency grid as a dense
+    (options x latencies) array min instead of a Python hull walk;
+  * memoization — Layer-2 GA results are cached per
+    (pool fingerprint, network, objective, requirement, GA budget), so
+    SA iterations that revisit a pool (rejected moves, identity
+    mutations, the final full-budget re-eval) skip the GA entirely, and
+    stage options are additionally cached per *single chiplet* so a
+    one-SKU neighbor move only enumerates options for the new SKU;
+  * parallelism — `evaluate_pool`'s per-network loop can fan out over a
+    thread pool (`workers`, or MOZART_WORKERS).
+
+`MOZART_DISABLE_ENGINE=1` (or `set_engine_enabled(False)`) restores the
+seed's scalar, uncached behavior — used by
+benchmarks/bench_codesign_search.py for before/after timing.
+"""
+from __future__ import annotations
+
+import math
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import astuple
+from typing import TYPE_CHECKING, Sequence
+
+if TYPE_CHECKING:   # pragma: no cover - type-only; avoids an import cycle
+    from .chiplets import Chiplet
+    from .fusion import FusionResult, GAConfig, Requirement
+    from .operators import OperatorGraph
+
+_enabled = os.environ.get("MOZART_DISABLE_ENGINE", "0") != "1"
+
+
+def engine_enabled() -> bool:
+    """Global switch consulted by perfmodel/convexhull/fusion/pool."""
+    return _enabled
+
+
+def set_engine_enabled(flag: bool) -> None:
+    global _enabled
+    _enabled = bool(flag)
+
+
+def _default_workers() -> int:
+    try:
+        return int(os.environ.get("MOZART_WORKERS", "0") or 0)
+    except ValueError:
+        return 0
+
+
+class EvaluationEngine:
+    """Memoized, optionally parallel evaluator for (pool, network) pairs.
+
+    The cache key covers everything `fusion.optimize_fusion` depends on:
+    the exact pool composition (order-sensitive — the GA's roofline seed
+    tie-breaks on pool order), the operator graph, the objective, the
+    latency requirement, and the full GA budget.
+    """
+
+    def __init__(self, workers: int | None = None):
+        self.workers = _default_workers() if workers is None else workers
+        self._cache: dict[tuple, "FusionResult | None"] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    # -- cache plumbing ------------------------------------------------
+
+    @staticmethod
+    def _key(pool: Sequence["Chiplet"], graph: "OperatorGraph",
+             objective: str, req: "Requirement", ga: "GAConfig") -> tuple:
+        return (tuple(pool), graph, objective, req, astuple(ga))
+
+    def clear(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self.hits = 0
+            self.misses = 0
+
+    # -- evaluation ----------------------------------------------------
+
+    def evaluate_network(self, pool: Sequence["Chiplet"],
+                         graph: "OperatorGraph", objective: str,
+                         req: "Requirement",
+                         ga: "GAConfig") -> "FusionResult | None":
+        from .fusion import optimize_fusion
+        key = self._key(pool, graph, objective, req, ga)
+        with self._lock:
+            if key in self._cache:
+                self.hits += 1
+                return self._cache[key]
+        res = optimize_fusion(graph, pool, objective=objective, req=req,
+                              cfg=ga)
+        with self._lock:
+            # A racing thread may have filled the slot; keep the first
+            # result so repeated queries stay consistent.
+            if key in self._cache:
+                self.hits += 1
+                return self._cache[key]
+            self.misses += 1
+            self._cache[key] = res
+        return res
+
+    def evaluate_pool(self, pool: Sequence["Chiplet"],
+                      networks: dict[str, "OperatorGraph"],
+                      objective: str,
+                      reqs: dict[str, "Requirement"] | None,
+                      ga: "GAConfig",
+                      workers: int | None = None
+                      ) -> tuple[float, dict[str, "FusionResult"]]:
+        """(geomean objective value, per-network best design)."""
+        from .fusion import Requirement
+        reqs = reqs or {}
+        names = list(networks)
+        n_workers = self.workers if workers is None else workers
+
+        def one(name: str) -> "FusionResult | None":
+            return self.evaluate_network(pool, networks[name], objective,
+                                         reqs.get(name, Requirement()), ga)
+
+        if n_workers > 1 and len(names) > 1:
+            with ThreadPoolExecutor(max_workers=n_workers) as ex:
+                results = list(ex.map(one, names))
+        else:
+            results = [one(n) for n in names]
+
+        per: dict[str, "FusionResult"] = {}
+        logsum = 0.0
+        for name, res in zip(names, results):
+            if res is None:
+                return math.inf, {}
+            per[name] = res
+            logsum += math.log(max(res.value, 1e-30))
+        return math.exp(logsum / max(len(names), 1)), per
+
+
+DEFAULT_ENGINE = EvaluationEngine()
+
+
+def clear_all_caches() -> None:
+    """Reset every cross-call cache in the codesign stack (engine memo +
+    fusion's stage-option LRUs) — used for fair before/after timing."""
+    from . import fusion
+    DEFAULT_ENGINE.clear()
+    fusion.clear_option_caches()

@@ -29,8 +29,10 @@ from .convexhull import (PipelineSolution, default_latency_grid,
                          solve_pipeline)
 from .memory import DDR5, HBM3, MEMORY_POOL, MemoryType
 from .operators import Operator, OperatorGraph
-from .perfmodel import (BATCH_OPTIONS, StageOption, enumerate_stage_options,
-                        is_memory_bound, scale_option)
+from .engine import engine_enabled
+from .perfmodel import (BATCH_OPTIONS, StageOption, StageOptionSet,
+                        enumerate_stage_options, is_memory_bound,
+                        scale_option)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,40 +107,83 @@ def groups_from_genome(graph: OperatorGraph, g: Genome) -> list[FusionGroup]:
     return groups
 
 
+@functools.lru_cache(maxsize=500_000)
+def _chiplet_group_options(ops: tuple[Operator, ...], repeat: int,
+                           chiplet: Chiplet, memory: MemoryType,
+                           fixed_batch: int | None,
+                           batches: tuple[int, ...],
+                           name: str) -> tuple[StageOption, ...]:
+    """Options for one fusion group on ONE chiplet SKU.  Keyed per SKU so
+    a single-SKU pool mutation (the SA neighbor move) re-enumerates only
+    the new SKU's options; the other pool members come from cache."""
+    return tuple(enumerate_stage_options(
+        ops, (chiplet,), memories=(memory,), batches=batches, name=name,
+        fixed_batch=fixed_batch, cost_fn=costmodel.stage_hw_cost,
+        repeat=repeat))
+
+
 @functools.lru_cache(maxsize=200_000)
 def _group_options_cached(ops: tuple[Operator, ...], repeat: int,
                           pool: tuple[Chiplet, ...], memory: MemoryType,
                           fixed_batch: int | None,
                           batches: tuple[int, ...],
-                          name: str) -> tuple[StageOption, ...]:
+                          name: str) -> StageOptionSet:
+    if engine_enabled():
+        opts: list[StageOption] = []
+        for c in pool:
+            opts.extend(_chiplet_group_options(ops, repeat, c, memory,
+                                               fixed_batch, batches, name))
+        out = StageOptionSet(opts)
+        out.columns()        # build once, reused by every genome eval
+        return out
     raw = enumerate_stage_options(ops, pool, memories=(memory,),
                                   batches=batches, name=name,
-                                  fixed_batch=fixed_batch)
+                                  fixed_batch=fixed_batch, vectorize=False)
     priced = costmodel.price_stage_options(raw)
-    return tuple(scale_option(o, repeat) for o in priced)
+    return StageOptionSet(scale_option(o, repeat) for o in priced)
+
+
+def clear_option_caches() -> None:
+    _chiplet_group_options.cache_clear()
+    _group_options_cached.cache_clear()
 
 
 def stage_options_for_groups(groups: Sequence[FusionGroup],
                              pool: Sequence[Chiplet],
-                             cfg: GAConfig) -> list[list[StageOption]]:
-    return [list(_group_options_cached(g.ops, g.repeat, tuple(pool),
-                                       g.memory, cfg.fixed_batch,
-                                       tuple(cfg.batches), g.name))
+                             cfg: GAConfig) -> list[StageOptionSet]:
+    return [_group_options_cached(g.ops, g.repeat, tuple(pool),
+                                  g.memory, cfg.fixed_batch,
+                                  tuple(cfg.batches), g.name)
             for g in groups]
 
 
 def evaluate_genome(graph: OperatorGraph, genome: Genome,
                     pool: Sequence[Chiplet], objective: str,
-                    req: Requirement, cfg: GAConfig
+                    req: Requirement, cfg: GAConfig,
+                    _solution_cache: dict | None = None
                     ) -> FusionResult | None:
     groups = groups_from_genome(graph, genome)
+    # Memory genes of non-leading ops are silent (§4.2): distinct genomes
+    # can decode to identical fusion groups.  Collapse them onto one
+    # Layer-3 solve via the caller-scoped solution cache.
+    key = tuple(groups) if _solution_cache is not None else None
+    if key is not None and key in _solution_cache:
+        sol = _solution_cache[key]
+        if sol is None:
+            return None
+        return FusionResult(genome=genome, groups=groups, solution=sol,
+                            value=sol.value)
     options = stage_options_for_groups(groups, pool, cfg)
     if any(not o for o in options):
+        if key is not None:
+            _solution_cache[key] = None
         return None
     grid = default_latency_grid(options, n=cfg.latency_points)
     n_stages = sum(g.repeat for g in groups)
     sol = solve_pipeline(options, grid, objective=objective,
                          max_e2e=req.max_e2e, n_stages=n_stages)
+    if key is not None:
+        _solution_cache[key] = sol
     if sol is None:
         return None
     return FusionResult(genome=genome, groups=groups, solution=sol,
@@ -192,9 +237,11 @@ def _crossover(a: Genome, b: Genome, rng: random.Random) -> Genome:
 
 def optimize_fusion(graph: OperatorGraph, pool: Sequence[Chiplet],
                     objective: str = "energy",
-                    req: Requirement = Requirement(),
-                    cfg: GAConfig = GAConfig()) -> FusionResult | None:
+                    req: Requirement | None = None,
+                    cfg: GAConfig | None = None) -> FusionResult | None:
     """The full Layer-2 GA.  Returns the best feasible FusionResult."""
+    req = req if req is not None else Requirement()
+    cfg = cfg if cfg is not None else GAConfig()
     rng = random.Random(cfg.seed)
     n = len(graph.operators)
 
@@ -205,10 +252,12 @@ def optimize_fusion(graph: OperatorGraph, pool: Sequence[Chiplet],
         pop.append(_mutate(seeds[0], rng, 0.3))
 
     cache: dict[Genome, FusionResult | None] = {}
+    solution_cache: dict = {} if engine_enabled() else None
 
     def fit(g: Genome) -> float:
         if g not in cache:
-            cache[g] = evaluate_genome(graph, g, pool, objective, req, cfg)
+            cache[g] = evaluate_genome(graph, g, pool, objective, req, cfg,
+                                       _solution_cache=solution_cache)
         r = cache[g]
         return math.inf if r is None else r.value
 

@@ -43,6 +43,18 @@ class Operator:
         assert self.kind in KINDS, self.kind
         assert self.batch_scaling in (BATCH_SENSITIVE, BATCH_AGNOSTIC)
 
+    def __hash__(self):
+        # Operator tuples key the per-group option caches; memoize the
+        # hash (frozen -> fields never change).
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash((self.name, self.kind, self.flops, self.weight_bytes,
+                      self.act_in_bytes, self.act_out_bytes,
+                      self.parallel_work, self.batch_scaling,
+                      self.weight_reuse_divisor))
+            object.__setattr__(self, "_hash", h)
+        return h
+
     def arithmetic_intensity(self, batch: int = 1) -> float:
         """FLOPs per DRAM byte at a given batch size (first-order)."""
         f = self.flops * batch

@@ -14,9 +14,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable, Sequence
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
 
 from .chiplets import (Chiplet, E_INTERCHIP_BIT, E_MAC_BASE, E_SRAM_BYTE)
+from .engine import engine_enabled
 from .memory import MEMORY_POOL, MemoryType
 from .operators import BATCH_AGNOSTIC, Operator
 
@@ -145,20 +148,94 @@ def scale_option(o: StageOption, repeat: int) -> StageOption:
         flops_per_sample=o.flops_per_sample * repeat, repeat=repeat)
 
 
-def enumerate_stage_options(
-        ops: Sequence[Operator],
-        pool: Sequence[Chiplet],
-        memories: Sequence[MemoryType] = MEMORY_POOL,
-        batches: Sequence[int] = BATCH_OPTIONS,
-        tps: Sequence[int] = TP_OPTIONS,
-        name: str = "",
-        fixed_batch: int | None = None,
-        max_mem_units: int = 8) -> list[StageOption]:
-    """All StageOptions for a fusion group: the `M` of Algorithm 1."""
+class StageOptionSet(Sequence):
+    """A sequence of StageOptions with lazily-built column arrays.
+
+    `solve_pipeline` consumes the (t_cmp, e_dyn, p_static, hw_cost)
+    columns directly when sweeping the iso-latency grid, so the arrays
+    are built once per cached option set instead of once per GA genome.
+    """
+
+    __slots__ = ("options", "_cols", "_pruned")
+
+    def __init__(self, options: Iterable[StageOption]):
+        self.options = tuple(options)
+        self._cols: tuple[np.ndarray, ...] | None = None
+        self._pruned: dict[bool, tuple] = {}
+
+    def __len__(self) -> int:
+        return len(self.options)
+
+    def __getitem__(self, i):
+        return self.options[i]
+
+    def __iter__(self):
+        return iter(self.options)
+
+    def columns(self) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray]:
+        if self._cols is None:
+            o = self.options
+            self._cols = (
+                np.array([x.t_cmp for x in o], dtype=np.float64),
+                np.array([x.e_dyn for x in o], dtype=np.float64),
+                np.array([x.p_static for x in o], dtype=np.float64),
+                np.array([x.hw_cost_usd for x in o], dtype=np.float64))
+        return self._cols
+
+    def pruned(self, weighted: bool) -> tuple[np.ndarray, np.ndarray,
+                                              np.ndarray, np.ndarray]:
+        """(t_cmp, slope, intercept, original_index) restricted to
+        non-dominated options — exact: pruning never changes the envelope
+        minimum at any latency, nor the hull engine's tie-break winner."""
+        cached = self._pruned.get(weighted)
+        if cached is None:
+            t_cmp, e_dyn, p_static, hw = self.columns()
+            w = np.maximum(hw, 1e-9) if weighted else 1.0
+            slope, icept = p_static * w, e_dyn * w
+            idx = np.flatnonzero(envelope_keep_mask(t_cmp, slope, icept))
+            cached = (t_cmp[idx], slope[idx], icept[idx], idx)
+            self._pruned[weighted] = cached
+        return cached
+
+
+def envelope_keep_mask(t_cmp: np.ndarray, slope: np.ndarray,
+                       icept: np.ndarray) -> np.ndarray:
+    """Mask of options NOT dominated by a single other option.
+
+    Option j is dominated by k when k activates no later (t_cmp_k <=
+    t_cmp_j) and its line lies at-or-below j's everywhere (slope and
+    intercept both <=), with either some strict inequality or, for exact
+    duplicates, an earlier index (matching the hull's first-insert-wins
+    tie-break).  Every removed option has a surviving dominator, so the
+    envelope minimum — and the chosen payload under the (value, t_cmp,
+    index) tie-break — is unchanged at every query latency.
+    """
+    m = t_cmp.size
+    if m <= 2:
+        return np.ones(m, dtype=bool)
+    le = ((t_cmp[:, None] <= t_cmp) & (slope[:, None] <= slope)
+          & (icept[:, None] <= icept))
+    strict = ((t_cmp[:, None] < t_cmp) | (slope[:, None] < slope)
+              | (icept[:, None] < icept))
+    order = np.arange(m)
+    dominated = np.any(le & (strict | (order[:, None] < order)), axis=0)
+    return ~dominated
+
+
+def stage_config_grid(ops: Sequence[Operator],
+                      pool: Sequence[Chiplet],
+                      memories: Sequence[MemoryType] = MEMORY_POOL,
+                      batches: Sequence[int] = BATCH_OPTIONS,
+                      tps: Sequence[int] = TP_OPTIONS,
+                      fixed_batch: int | None = None,
+                      max_mem_units: int = 8) -> list[StageConfig]:
+    """The exact (chiplet, memory, mem_units, tp, batch) tuples a fusion
+    group is evaluated on — the `M` axis of Algorithm 1."""
     capacity = sum(o.weight_bytes for o in ops) + \
         max((o.act_in_bytes + o.act_out_bytes) for o in ops)
-    out: list[StageOption] = []
     bs = (fixed_batch,) if fixed_batch is not None else tuple(batches)
+    cfgs: list[StageConfig] = []
     for c in pool:
         for m in memories:
             min_units = m.units_for(capacity, 0)
@@ -168,9 +245,154 @@ def enumerate_stage_options(
                                  max_mem_units}):
                 for tp in tps:
                     for b in bs:
-                        cfg = StageConfig(chiplet=c, memory=m,
-                                          mem_units=units, tp=tp, batch=b)
-                        out.append(evaluate_group(ops, cfg, name=name))
+                        cfgs.append(StageConfig(chiplet=c, memory=m,
+                                                mem_units=units, tp=tp,
+                                                batch=b))
+    return cfgs
+
+
+def evaluate_group_batch(ops: Sequence[Operator],
+                         cfgs: Sequence[StageConfig],
+                         name: str = "",
+                         cost_fn: Callable[[StageConfig], float] | None = None,
+                         repeat: int = 1) -> list[StageOption]:
+    """Vectorized `evaluate_group` over a list of stage configs.
+
+    Every arithmetic step mirrors the scalar path operation-for-operation
+    (same association order, IEEE float64 throughout), so the returned
+    StageOptions are bit-identical to per-config `evaluate_group` calls.
+    repeat > 1 additionally folds `scale_option` into construction.
+    """
+    if not cfgs:
+        return []
+    n = len(cfgs)
+    # Per-config parameter columns; chiplet-derived values are computed
+    # once per distinct chiplet and gathered.
+    chip_index: dict[Chiplet, int] = {}
+    chip_rows: list[tuple] = []
+    idx = np.empty(len(cfgs), dtype=np.intp)
+    for j, cfg in enumerate(cfgs):
+        c = cfg.chiplet
+        i = chip_index.get(c)
+        if i is None:
+            i = chip_index[c] = len(chip_rows)
+            chip_rows.append((c.peak_flops, c.n_pes, c.glb_bytes,
+                              c.static_power_w, c.interchip_bw,
+                              *(c.utilization(op.kind) for op in ops),
+                              *(c.sram_traffic_factor(op.kind)
+                                for op in ops)))
+        idx[j] = i
+    rows = np.array(chip_rows, dtype=np.float64)[idx]
+    peak, n_pes, glb, p_stat, ic_bw = rows[:, :5].T
+    util = rows[:, 5:5 + len(ops)].T
+    stf = rows[:, 5 + len(ops):].T
+    B = np.array([cfg.batch for cfg in cfgs], dtype=np.float64)
+    tp = np.array([cfg.tp for cfg in cfgs], dtype=np.float64)
+    units = np.array([cfg.mem_units for cfg in cfgs], dtype=np.float64)
+    bw_pu = np.array([cfg.memory.bw_per_unit for cfg in cfgs],
+                     dtype=np.float64)
+    pj_bit = np.array([cfg.memory.pj_per_bit for cfg in cfgs],
+                      dtype=np.float64)
+
+    t_compute = np.zeros(n)
+    e_mac = np.zeros(n)
+    sram_traffic = np.zeros(n)
+    for i, op in enumerate(ops):
+        size_eff = np.minimum(1.0, (op.parallel_work * B) / (n_pes * tp))
+        rate = peak * util[i] * size_eff * tp
+        t_compute += (op.flops * B) / np.maximum(rate, 1.0)
+        e_mac += op.flops * B * 0.5 * E_MAC_BASE
+        sram_traffic += (op.act_in_bytes + op.act_out_bytes) * B * stf[i]
+
+    # _group_dram_bytes, vectorized over (glb*tp, B).
+    usable = glb * tp / 2
+    dram = np.zeros(n)
+    for i, op in enumerate(ops):
+        w = op.weight_bytes
+        if op.weight_reuse_divisor > 1.0:
+            dram += np.minimum(
+                op.weight_bytes,
+                (op.weight_bytes / op.weight_reuse_divisor) * B)
+        else:
+            dram += w
+        a_in = op.act_in_bytes * B
+        a_out = op.act_out_bytes * B
+        if i == 0:
+            dram += a_in
+        else:
+            dram += np.where(ops[i - 1].act_out_bytes * B > usable,
+                             a_in, 0.0)
+        if i == len(ops) - 1:
+            dram += a_out
+        else:
+            dram += np.where(a_out > usable, a_out, 0.0)
+
+    bw = bw_pu * units
+    t_mem = dram / bw
+
+    out_bytes = ops[-1].act_out_bytes * B
+    tp_bytes = sum(o.act_out_bytes for o in ops) * B * (tp - 1)
+    t_comm = (tp_bytes + out_bytes) / ic_bw
+    e_link = (tp_bytes + out_bytes) * 8.0 * E_INTERCHIP_BIT
+
+    t_batch = np.maximum(t_compute, t_mem) + t_comm
+    e_mem = dram * 8.0 * pj_bit * 1e-12
+    e_dyn = (e_mac + sram_traffic * E_SRAM_BYTE + e_mem + e_link)
+
+    t_cmp = t_batch / B
+    e_per = e_dyn / B
+    p_static = p_stat * tp
+    flops_per_sample = sum(o.flops for o in ops)
+    if repeat != 1:
+        # scale_option folded in: energy/leakage/cost/FLOPs scale with
+        # the physical copy count, per-stage latency doesn't.
+        e_per = e_per * repeat
+        p_static = p_static * repeat
+        flops_per_sample = flops_per_sample * repeat
+    t_cmp_l = t_cmp.tolist()
+    e_per_l = e_per.tolist()
+    p_static_l = p_static.tolist()
+    return [StageOption(
+        t_cmp=t_cmp_l[j], e_dyn=e_per_l[j], p_static=p_static_l[j],
+        hw_cost_usd=0.0 if cost_fn is None else cost_fn(cfg) * repeat,
+        cfg=cfg, group_name=name, flops_per_sample=flops_per_sample,
+        repeat=repeat)
+        for j, cfg in enumerate(cfgs)]
+
+
+def enumerate_stage_options(
+        ops: Sequence[Operator],
+        pool: Sequence[Chiplet],
+        memories: Sequence[MemoryType] = MEMORY_POOL,
+        batches: Sequence[int] = BATCH_OPTIONS,
+        tps: Sequence[int] = TP_OPTIONS,
+        name: str = "",
+        fixed_batch: int | None = None,
+        max_mem_units: int = 8,
+        vectorize: bool | None = None,
+        cost_fn: Callable[[StageConfig], float] | None = None,
+        repeat: int = 1) -> list[StageOption]:
+    """All StageOptions for a fusion group: the `M` of Algorithm 1.
+
+    vectorize=None follows the global engine switch; the scalar and
+    batched paths produce identical options.  cost_fn, when given, fills
+    hw_cost_usd at construction (saves a re-pricing pass); repeat folds
+    `scale_option` into construction.
+    """
+    cfgs = stage_config_grid(ops, pool, memories=memories, batches=batches,
+                             tps=tps, fixed_batch=fixed_batch,
+                             max_mem_units=max_mem_units)
+    if vectorize is None:
+        vectorize = engine_enabled()
+    if vectorize:
+        return evaluate_group_batch(ops, cfgs, name=name, cost_fn=cost_fn,
+                                    repeat=repeat)
+    out = [evaluate_group(ops, cfg, name=name) for cfg in cfgs]
+    if cost_fn is not None:
+        out = [dataclasses.replace(o, hw_cost_usd=cost_fn(o.cfg))
+               for o in out]
+    if repeat != 1:
+        out = [scale_option(o, repeat) for o in out]
     return out
 
 

@@ -1,0 +1,15 @@
+"""JAX version compatibility for the Pallas TPU kernels.
+
+The TPU compiler-params class was renamed `TPUCompilerParams` ->
+`CompilerParams` across JAX releases; resolve whichever this JAX ships.
+"""
+from __future__ import annotations
+
+
+def tpu_compiler_params(**kwargs):
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:     # pragma: no cover - very old / CPU-only pallas
+        return None
+    return cls(**kwargs)

@@ -128,8 +128,8 @@ def _vmem(shape, dtype):
 
 def _tpu_params():
     try:
-        from jax.experimental.pallas import tpu as pltpu
-        return pltpu.CompilerParams(
+        from repro.kernels._compat import tpu_compiler_params
+        return tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     except Exception:
         return None

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 
 def _moe_mlp_kernel(x_ref, wg_ref, wi_ref, wo_ref, o_ref, acc_ref, *,
                     n_ff_blocks: int, swiglu: bool):
@@ -78,7 +80,7 @@ def moe_mlp_pallas(x, wg, wi, wo, *, swiglu: bool = True, bt: int = 128,
         out_specs=pl.BlockSpec((1, bt, d), lambda ie, it, jf: (ie, it, 0)),
         out_shape=jax.ShapeDtypeStruct((e, x.shape[1], d), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, wg, wi, wo)

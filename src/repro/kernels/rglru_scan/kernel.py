@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 
 def _rglru_kernel(h0_ref, a_ref, b_ref, o_ref, h_ref, *, bs: int):
     it = pl.program_id(2)
@@ -59,7 +61,7 @@ def rglru_scan_pallas(a, b, h0, *, bs: int = 256, bw: int = 128,
         out_specs=pl.BlockSpec((1, bs, bw), lambda ib, iw, it: (ib, it, iw)),
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
         scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(h0, a, b)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, s_ref,
                 *, chunk: int):
@@ -97,7 +99,7 @@ def wkv6_pallas(r, k, v, logw, u, s0, *, chunk: int = 64,
         out_specs=pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, r.shape[1], dv), r.dtype),
         scratch_shapes=[pltpu.VMEM((d, dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, logw, u, s0)

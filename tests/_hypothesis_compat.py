@@ -1,0 +1,69 @@
+"""Fallback property-testing shim for environments without `hypothesis`.
+
+Exposes the tiny subset the test-suite uses (`given`, `settings`,
+`strategies.integers/sampled_from/booleans/floats`).  The fallback runs
+each property against a deterministic seeded sample sweep — weaker than
+real hypothesis (no shrinking, no example database) but it keeps the
+property tests exercising the same code paths.  When `hypothesis` is
+installed it is re-exported unchanged.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+try:                                    # pragma: no cover - prefer the real thing
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies` spelling
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def settings(max_examples: int = 20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    drawn = [s.sample(rng) for s in arg_strategies]
+                    kdrawn = {k: s.sample(rng)
+                              for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **kdrawn)
+            # pytest must see the zero-arg wrapper signature, not the
+            # wrapped function's (it would demand fixtures for the
+            # strategy parameters).
+            del wrapper.__dict__["__wrapped__"]
+            return wrapper
+        return deco

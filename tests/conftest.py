@@ -1,0 +1,41 @@
+"""Shared test plumbing: a lightweight per-test --timeout (SIGALRM-based,
+no pytest-timeout dependency needed)."""
+import signal
+
+import pytest
+
+_own_timeout_option = False
+
+
+def pytest_addoption(parser):
+    global _own_timeout_option
+    try:
+        parser.addoption(
+            "--timeout", type=float, default=0.0,
+            help="per-test timeout in seconds (0 = off; SIGALRM-based, "
+                 "main-thread Unix only)")
+        _own_timeout_option = True
+    except ValueError:
+        # pytest-timeout (or similar) already registered --timeout;
+        # defer to it entirely.
+        pass
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    limit = item.config.getoption("--timeout") if _own_timeout_option \
+        else None
+    if not limit or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(f"test exceeded --timeout={limit}s")
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, limit)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)

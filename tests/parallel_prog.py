@@ -25,10 +25,18 @@ CFG = ModelConfig(name="tp", n_layers=2, d_model=64, n_heads=4,
                   scan_min_layers=2)
 
 
+def make_mesh(shape, names):
+    """jax.make_mesh across JAX versions: axis_types only where it exists."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, names,
+                             axis_types=(axis_type.Auto,) * len(names))
+    return jax.make_mesh(shape, names)
+
+
 def check_tp_dp_forward_matches_single():
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     params = api.init_params(CFG, jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
                               CFG.vocab)
@@ -45,8 +53,7 @@ def check_tp_dp_forward_matches_single():
 
 
 def check_sharded_decode_matches_single():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     params = api.init_params(CFG, jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0,
                               CFG.vocab)
@@ -67,8 +74,7 @@ def check_sharded_decode_matches_single():
 
 
 def check_pipeline_parallel():
-    mesh = jax.make_mesh((8,), ("pp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("pp",))
     n_stages, n_micro, mb, d = 8, 4, 2, 16
     ks = jax.random.split(jax.random.PRNGKey(0), n_stages)
     ws = jnp.stack([jax.random.normal(k, (d, d)) * 0.3 for k in ks])
@@ -88,8 +94,7 @@ def check_pipeline_parallel():
 
 
 def check_optimizer_shardings_cover_tree():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     params = jax.eval_shape(
         lambda: api.init_params(CFG, jax.random.PRNGKey(0)))
     for name in ("adamw", "adafactor"):
@@ -105,10 +110,8 @@ def check_elastic_reshard_roundtrip(tmpdir):
     """Save on mesh A (2x4), restore onto mesh B (4x2)."""
     from repro.checkpoint.manager import CheckpointManager
     params = api.init_params(CFG, jax.random.PRNGKey(0))
-    mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_a = make_mesh((2, 4), ("data", "model"))
+    mesh_b = make_mesh((4, 2), ("data", "model"))
     pa = jax.device_put(params, params_shardings(mesh_a, params))
     m = CheckpointManager(tmpdir)
     m.save(1, pa)

@@ -11,6 +11,8 @@ from repro import configs
 from repro.models import api
 from repro.training.optimizer import OptimizerConfig, apply_opt, init_opt
 
+pytestmark = pytest.mark.slow   # multi-minute JAX compile/run; excluded from tier-1
+
 
 def _batch_for(cfg, B=2, S=32, key=jax.random.PRNGKey(1)):
     ks = jax.random.split(key, 2)

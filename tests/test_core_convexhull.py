@@ -4,7 +4,7 @@ import math
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.chiplets import Chiplet
 from repro.core.convexhull import (DynamicLowerHull, LiChaoTree, Line,

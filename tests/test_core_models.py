@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import costmodel, operators
 from repro.core.chiplets import Chiplet, default_pool, full_design_space

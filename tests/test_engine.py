@@ -1,0 +1,217 @@
+"""Evaluation-engine regression tests: the cached/vectorized stack must
+reproduce the seed (scalar, uncached) implementation exactly for a fixed
+seed, and actually cache."""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel, engine, operators
+from repro.core.chiplets import Chiplet, default_pool
+from repro.core.convexhull import solve_pipeline
+from repro.core.fusion import GAConfig, Requirement, optimize_fusion
+from repro.core.memory import HBM3
+from repro.core.perfmodel import (StageConfig, StageOption, StageOptionSet,
+                                  enumerate_stage_options,
+                                  envelope_keep_mask)
+from repro.core.pool import SAConfig, _neighbor, anneal_pool, evaluate_pool
+
+
+@pytest.fixture(autouse=True)
+def _engine_state():
+    """Each test starts engine-enabled with cold caches and restores the
+    global switch afterwards."""
+    was = engine.engine_enabled()
+    engine.set_engine_enabled(True)
+    engine.clear_all_caches()
+    yield
+    engine.set_engine_enabled(was)
+    engine.clear_all_caches()
+
+
+def _graphs():
+    ws = operators.paper_workloads(seq=512)
+    return {"resnet50": ws["resnet50"],
+            "opt66b_decode": ws["opt66b_decode"]}
+
+
+# --- vectorized perf model == scalar perf model -----------------------------
+
+def test_batched_enumeration_bit_identical_to_scalar():
+    ops = tuple(operators.lm_layer_operators(
+        operators.OPT_66B, 128, 0, "prefill")[:4])
+    pool = default_pool()
+    scalar = enumerate_stage_options(ops, pool, vectorize=False)
+    batched = enumerate_stage_options(ops, pool, vectorize=True)
+    assert len(scalar) == len(batched) > 100
+    for s, b in zip(scalar, batched):
+        assert s.cfg == b.cfg
+        assert s.t_cmp == b.t_cmp                 # bit-exact, not approx
+        assert s.e_dyn == b.e_dyn
+        assert s.p_static == b.p_static
+        assert s.flops_per_sample == b.flops_per_sample
+
+
+def test_batched_enumeration_with_pricing_and_repeat():
+    ops = tuple(operators.lm_layer_operators(
+        operators.OPT_66B, 128, 0, "prefill")[:2])
+    pool = default_pool()[:3]
+    scalar = enumerate_stage_options(ops, pool, vectorize=False,
+                                     cost_fn=costmodel.stage_hw_cost,
+                                     repeat=24)
+    batched = enumerate_stage_options(ops, pool, vectorize=True,
+                                      cost_fn=costmodel.stage_hw_cost,
+                                      repeat=24)
+    for s, b in zip(scalar, batched):
+        assert s == b                             # full dataclass equality
+
+
+def test_moe_group_parity():
+    spec = operators.LMSpec(name="moe", n_layers=2, d_model=512, n_heads=8,
+                            kv_heads=8, d_ff=1024, vocab=1000,
+                            n_experts=8, top_k=2)
+    g = operators.lm_operator_graph(spec, 128, "prefill")
+    moe_ops = tuple(o for o in g.operators if o.weight_reuse_divisor > 1.0)
+    assert moe_ops
+    scalar = enumerate_stage_options(moe_ops, default_pool(),
+                                     vectorize=False)
+    batched = enumerate_stage_options(moe_ops, default_pool(),
+                                      vectorize=True)
+    for s, b in zip(scalar, batched):
+        assert s.t_cmp == b.t_cmp and s.e_dyn == b.e_dyn
+
+
+# --- vectorized Layer-3 == hull Layer-3 -------------------------------------
+
+def _rand_option(rng):
+    cfg = StageConfig(Chiplet(), HBM3, 1, 1, 1)
+    return StageOption(t_cmp=rng.uniform(0.05, 10.0),
+                       e_dyn=rng.uniform(0.1, 100.0),
+                       p_static=rng.uniform(0.01, 5.0),
+                       hw_cost_usd=rng.uniform(1.0, 1000.0), cfg=cfg)
+
+
+def test_numpy_solver_matches_hull_exactly():
+    for seed in range(40):
+        rng = random.Random(seed)
+        stages = [[_rand_option(rng) for _ in range(rng.randint(1, 15))]
+                  for _ in range(rng.randint(1, 5))]
+        if seed % 2:
+            stages = [StageOptionSet(s) for s in stages]
+        lat = sorted(rng.uniform(0.01, 15.0)
+                     for _ in range(rng.randint(1, 25)))
+        for obj in ("energy", "edp", "energy_cost", "edp_cost"):
+            a = solve_pipeline(stages, lat, objective=obj, engine="numpy")
+            h = solve_pipeline(stages, lat, objective=obj, engine="hull")
+            assert (a is None) == (h is None)
+            if a is not None:
+                assert a.value == h.value and a.T == h.T
+
+
+def test_envelope_keep_mask_preserves_minimum():
+    rng = random.Random(7)
+    for _ in range(30):
+        m = rng.randint(1, 60)
+        tc = np.array([rng.uniform(0.0, 5.0) for _ in range(m)])
+        sl = np.array([rng.choice([0.5, 1.0, 2.0]) for _ in range(m)])
+        ic = np.array([rng.choice([1.0, 3.0, 9.0]) for _ in range(m)])
+        keep = envelope_keep_mask(tc, sl, ic)
+        assert keep.any()
+        for t in np.linspace(0.0, 6.0, 13):
+            active = tc <= t
+            full = np.where(active, sl * t + ic, np.inf).min()
+            pruned = np.where(active & keep, sl * t + ic, np.inf).min()
+            assert full == pruned
+
+
+# --- memoization ------------------------------------------------------------
+
+def test_engine_caches_repeat_pool_evaluations():
+    graphs = _graphs()
+    ga = GAConfig(population=4, generations=1)
+    ev = engine.EvaluationEngine()
+    pool = default_pool()[:3]
+    s1, per1 = ev.evaluate_pool(pool, graphs, "energy", None, ga)
+    assert ev.misses == len(graphs) and ev.hits == 0
+    s2, per2 = ev.evaluate_pool(pool, graphs, "energy", None, ga)
+    assert ev.misses == len(graphs) and ev.hits == len(graphs)
+    assert s1 == s2
+    assert {n: r.value for n, r in per1.items()} == \
+           {n: r.value for n, r in per2.items()}
+    # a different pool is a miss, not a stale hit
+    ev.evaluate_pool(default_pool()[:4], graphs, "energy", None, ga)
+    assert ev.misses == 2 * len(graphs)
+
+
+def test_engine_parallel_workers_match_serial():
+    graphs = _graphs()
+    ga = GAConfig(population=4, generations=1)
+    pool = default_pool()[:3]
+    s_serial, per_serial = engine.EvaluationEngine(workers=0).evaluate_pool(
+        pool, graphs, "energy", None, ga)
+    s_par, per_par = engine.EvaluationEngine(workers=4).evaluate_pool(
+        pool, graphs, "energy", None, ga)
+    assert s_serial == s_par
+    assert {n: r.value for n, r in per_serial.items()} == \
+           {n: r.value for n, r in per_par.items()}
+
+
+def test_fixed_seed_anneal_identical_through_engine():
+    """The headline regression: cached+vectorized anneal_pool returns the
+    identical best pool, score, and stage configs as the seed path."""
+    graphs = _graphs()
+    sa = SAConfig(iterations=3, inner_ga=GAConfig(population=4,
+                                                  generations=1))
+    engine.set_engine_enabled(False)
+    engine.clear_all_caches()
+    legacy = anneal_pool(graphs, objective="energy", pool_size=4, cfg=sa)
+    engine.set_engine_enabled(True)
+    engine.clear_all_caches()
+    fast = anneal_pool(graphs, objective="energy", pool_size=4, cfg=sa)
+    assert [c.label for c in legacy.pool] == [c.label for c in fast.pool]
+    assert legacy.score == fast.score
+    for name in graphs:
+        sl = [o.cfg.label for o in legacy.per_network[name].solution.stages]
+        sf = [o.cfg.label for o in fast.per_network[name].solution.stages]
+        assert sl == sf, name
+
+
+# --- bugfix regressions -----------------------------------------------------
+
+def test_neighbor_never_returns_duplicate_skus():
+    rng = random.Random(0)
+    pool = default_pool()[:4]
+    for _ in range(300):
+        cand = _neighbor(pool, rng)
+        assert len(set(cand)) == len(cand)
+        pool = cand
+
+
+def test_no_shared_mutable_default_configs():
+    import inspect
+    from repro.core import codesign, fusion, pool as pool_mod
+    for fn in (fusion.optimize_fusion, pool_mod.evaluate_pool,
+               pool_mod.anneal_pool, codesign.design_for_network,
+               codesign.run_codesign, codesign.unconstrained_design,
+               codesign.homogeneous_design,
+               codesign.best_homogeneous_design):
+        for p in inspect.signature(fn).parameters.values():
+            assert not dataclasses.is_dataclass(p.default), \
+                f"{fn.__name__} still shares a mutable default " \
+                f"{p.name}={p.default!r}"
+
+
+def test_evaluate_pool_engine_off_matches_engine_on():
+    graphs = _graphs()
+    ga = GAConfig(population=4, generations=1)
+    pool = default_pool()[:3]
+    engine.set_engine_enabled(False)
+    engine.clear_all_caches()
+    s_off, per_off = evaluate_pool(pool, graphs, "energy", ga=ga)
+    engine.set_engine_enabled(True)
+    engine.clear_all_caches()
+    s_on, per_on = evaluate_pool(pool, graphs, "energy", ga=ga)
+    assert s_off == s_on
+    assert {n: r.value for n, r in per_off.items()} == \
+           {n: r.value for n, r in per_on.items()}

@@ -8,6 +8,8 @@ import pytest
 from repro.models import api, rglru, rwkv6, transformer as T, whisper as Wh
 from repro.models.config import ModelConfig
 
+pytestmark = pytest.mark.slow   # multi-minute JAX compile/run; excluded from tier-1
+
 BASE = dict(n_layers=3, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
             d_ff=128, vocab=97, dtype="float32", param_dtype="float32",
             scan_min_layers=2, capacity_factor=2.0)

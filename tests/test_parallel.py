@@ -8,6 +8,8 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+pytestmark = pytest.mark.slow   # multi-minute JAX compile/run; excluded from tier-1
+
 
 def _run(script: str, timeout: int = 900) -> str:
     env = dict(os.environ)

@@ -11,6 +11,8 @@ from repro.serving.engine import Request, ServingEngine
 from repro.serving.sampling import sample
 from repro.serving.specdec import spec_decode_greedy, spec_decode_sampled
 
+pytestmark = pytest.mark.slow   # multi-minute JAX compile/run; excluded from tier-1
+
 CFG = ModelConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
                   kv_heads=2, head_dim=16, d_ff=128, vocab=97,
                   dtype="float32", param_dtype="float32",

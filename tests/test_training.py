@@ -16,6 +16,8 @@ from repro.training.loop import (TrainConfig, init_train_state,
 from repro.training.optimizer import (OptimizerConfig, apply_opt, init_opt,
                                       lr_at)
 
+pytestmark = pytest.mark.slow   # multi-minute JAX compile/run; excluded from tier-1
+
 TINY = ModelConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
                    kv_heads=2, head_dim=16, d_ff=128, vocab=256,
                    dtype="float32", param_dtype="float32",
