@@ -1,0 +1,114 @@
+"""Search-budget vs. result-quality study (the data behind the raised
+default SA/GA budgets).
+
+Two provably-monotone budget axes are swept with a fixed seed and cold
+caches per level, recording best objective value and wall-clock:
+
+  * Layer-1 SA iterations — with a fixed seed the SA trajectory of a
+    longer run is a strict prefix-extension of a shorter one, so the
+    best-so-far score is monotone non-increasing in the iteration budget;
+  * Layer-2 GA generations — elitism carries the incumbent best genome
+    into every next generation and the per-generation rng stream does not
+    depend on the total generation count, so best fitness is monotone
+    non-increasing in the generation budget.
+
+The run fails (nonzero via benchmarks/run.py) if either series is not
+monotone-or-flat, and writes BENCH_budget_scaling.json for the CI gate.
+Run as `PYTHONPATH=src python -m benchmarks.bench_budget_scaling`.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import engine, operators
+from repro.core.chiplets import default_pool
+from repro.core.fusion import GAConfig, optimize_fusion
+from repro.core.pool import SAConfig, anneal_pool
+
+from .common import FAST, fmt, write_bench_json
+
+SA_LEVELS = (2, 4, 6) if FAST else (5, 10, 16, 24, 32)
+GA_LEVELS = (1, 2, 4) if FAST else (5, 10, 16, 24, 32)
+
+
+def _workload():
+    ws = operators.paper_workloads(seq=512)
+    return {"resnet50": ws["resnet50"],
+            "opt66b_decode": ws["opt66b_decode"]}
+
+
+def _sa_level(graphs, iterations: int) -> tuple[float, float]:
+    """(best inner score, wall seconds) for one SA budget, cold caches.
+
+    final_ga is deliberately None: the reported score is the inner-budget
+    score the SA itself optimizes, which carries the prefix-monotonicity
+    guarantee; a full-budget re-eval of a *different* best pool need not
+    be monotone.
+    """
+    engine.clear_all_caches()
+    sa = SAConfig(iterations=iterations,
+                  inner_ga=GAConfig(population=6, generations=2))
+    t0 = time.perf_counter()
+    res = anneal_pool(graphs, objective="energy", pool_size=4, cfg=sa)
+    return res.score, time.perf_counter() - t0
+
+
+def _ga_level(graph, generations: int) -> tuple[float, float]:
+    """(best fusion value, wall seconds) for one GA budget, cold caches."""
+    engine.clear_all_caches()
+    cfg = GAConfig(population=10, generations=generations)
+    t0 = time.perf_counter()
+    res = optimize_fusion(graph, default_pool(), objective="energy",
+                          cfg=cfg)
+    return (float("inf") if res is None else res.value,
+            time.perf_counter() - t0)
+
+
+def _monotone(scores: list[float]) -> bool:
+    return all(b <= a for a, b in zip(scores, scores[1:]))
+
+
+def run():
+    graphs = _workload()
+    rows = []
+
+    sa_levels = []
+    for it in SA_LEVELS:
+        score, wall = _sa_level(graphs, it)
+        sa_levels.append({"iterations": it, "score": score,
+                          "wall_s": round(wall, 4)})
+        rows.append((f"budget_scaling.sa_iter{it}", wall * 1e6,
+                     f"score={fmt(score)}"))
+
+    ga_levels = []
+    for gen in GA_LEVELS:
+        value, wall = _ga_level(graphs["opt66b_decode"], gen)
+        ga_levels.append({"generations": gen, "value": value,
+                          "wall_s": round(wall, 4)})
+        rows.append((f"budget_scaling.ga_gen{gen}", wall * 1e6,
+                     f"value={fmt(value)}"))
+
+    monotone_sa = _monotone([lv["score"] for lv in sa_levels])
+    monotone_ga = _monotone([lv["value"] for lv in ga_levels])
+    defaults = {"sa_iterations": SAConfig().iterations,
+                "ga_population": GAConfig().population,
+                "ga_generations": GAConfig().generations}
+    write_bench_json("budget_scaling", {
+        "sa_levels": sa_levels, "ga_levels": ga_levels,
+        "monotone_sa": monotone_sa, "monotone_ga": monotone_ga,
+        "default_budget": defaults,
+        "paper_budget": {"sa_iterations": 5, "ga_population": 10,
+                         "ga_generations": 10},
+    })
+    rows.append(("budget_scaling.monotone", 0.0,
+                 f"sa={monotone_sa} ga={monotone_ga} defaults={defaults}"))
+    if not (monotone_sa and monotone_ga):
+        raise AssertionError(
+            f"budget scaling is not monotone-or-flat: sa={sa_levels} "
+            f"ga={ga_levels}")
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

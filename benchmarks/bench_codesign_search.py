@@ -15,7 +15,7 @@ from repro.core import engine, operators
 from repro.core.fusion import GAConfig
 from repro.core.pool import SAConfig, anneal_pool
 
-from .common import FAST, fmt
+from .common import FAST, fmt, write_bench_json
 
 SA_ITERATIONS = 4 if FAST else 10
 
@@ -61,6 +61,14 @@ def run():
             f"pool={pools_equal} score={score_equal} stages={stages_equal}")
 
     speedup = us_seed / max(us_engine, 1.0)
+    write_bench_json("codesign_search", {
+        "seed_us": round(us_seed, 1),
+        "engine_us": round(us_engine, 1),
+        "speedup": round(speedup, 3),
+        "identical_best_design": True,       # asserted above
+        "sa_iterations": SA_ITERATIONS,
+        "score": res_engine.score,
+    })
     return [
         ("codesign_search.seed_impl", us_seed,
          f"score={fmt(res_seed.score)}"),

@@ -6,6 +6,7 @@ and is registered in run.py.  REPRO_BENCH_FAST=1 trims search budgets
 """
 from __future__ import annotations
 
+import json
 import math
 import os
 import time
@@ -14,6 +15,20 @@ from repro.core.chiplets import Chiplet, default_pool
 from repro.core.fusion import GAConfig
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+# Where BENCH_*.json artifacts land (CI uploads them and feeds them to
+# benchmarks/compare.py, the regression gate).
+BENCH_DIR = os.environ.get("REPRO_BENCH_DIR", ".")
+
+
+def write_bench_json(name: str, payload: dict) -> str:
+    """Write a BENCH_<name>.json artifact next to the benchmark run."""
+    path = os.path.join(BENCH_DIR, f"BENCH_{name}.json")
+    blob = {"bench": name, "fast": FAST, **payload}
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def ga_budget(pop: int = 10, gens: int = 10, **kw) -> GAConfig:

@@ -1,0 +1,101 @@
+"""CI benchmark-regression gate.
+
+Compares the BENCH_*.json artifacts written by
+`benchmarks.bench_codesign_search` and `benchmarks.bench_budget_scaling`
+against the checked-in thresholds in benchmarks/baselines.json, and exits
+nonzero on any regression:
+
+  * codesign_search — the cached/vectorized engine's speedup over the
+    seed implementation must stay >= min_speedup (the dev container
+    measures 5-6x; the threshold is deliberately loose for noisy CI
+    runners), and the engine must still return the identical best design;
+  * budget_scaling — both fixed-seed budget axes must remain
+    monotone-or-flat, i.e. more search budget never yields a worse
+    objective.
+
+Usage: PYTHONPATH=src python -m benchmarks.compare [--dir DIR]
+       [--baseline benchmarks/baselines.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _load(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError:
+        return None
+
+
+def check(bench_dir: str, baselines: dict) -> list[str]:
+    """Returns a list of human-readable failures (empty = gate passes)."""
+    failures: list[str] = []
+
+    path = os.path.join(bench_dir, "BENCH_codesign_search.json")
+    blob = _load(path)
+    base = baselines.get("codesign_search", {})
+    if blob is None:
+        failures.append(f"missing artifact: {path}")
+    else:
+        min_speedup = float(base.get("min_speedup", 1.0))
+        speedup = float(blob.get("speedup", 0.0))
+        if speedup < min_speedup:
+            failures.append(
+                f"codesign_search speedup regressed: {speedup:.2f}x < "
+                f"baseline {min_speedup:.2f}x")
+        else:
+            print(f"OK codesign_search: speedup {speedup:.2f}x >= "
+                  f"{min_speedup:.2f}x")
+        if not blob.get("identical_best_design", False):
+            failures.append(
+                "codesign_search: engine no longer returns the identical "
+                "best design")
+
+    path = os.path.join(bench_dir, "BENCH_budget_scaling.json")
+    blob = _load(path)
+    base = baselines.get("budget_scaling", {})
+    if blob is None:
+        failures.append(f"missing artifact: {path}")
+    elif base.get("require_monotone", True):
+        for key in ("monotone_sa", "monotone_ga"):
+            if not blob.get(key, False):
+                failures.append(
+                    f"budget_scaling: {key} is false — more budget "
+                    f"produced a worse objective")
+        if blob.get("monotone_sa") and blob.get("monotone_ga"):
+            n_sa = len(blob.get("sa_levels", []))
+            n_ga = len(blob.get("ga_levels", []))
+            print(f"OK budget_scaling: monotone over {n_sa} SA + "
+                  f"{n_ga} GA budget levels")
+    return failures
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default=os.environ.get("REPRO_BENCH_DIR", "."),
+                   help="directory holding the BENCH_*.json artifacts "
+                        "(default: REPRO_BENCH_DIR, matching where the "
+                        "benchmarks write them)")
+    p.add_argument("--baseline",
+                   default=os.path.join(os.path.dirname(__file__),
+                                        "baselines.json"))
+    args = p.parse_args()
+    baselines = _load(args.baseline)
+    if baselines is None:
+        print(f"cannot read baseline file {args.baseline}", file=sys.stderr)
+        sys.exit(2)
+    failures = check(args.dir, baselines)
+    if failures:
+        for f in failures:
+            print(f"FAIL {f}", file=sys.stderr)
+        sys.exit(1)
+    print("benchmark gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ MODULES = [
     "fig12_av",              # Figure 12
     "roofline",              # §Roofline (from dry-run artifacts)
     "bench_codesign_search",  # engine speedup: cached/vectorized vs seed
+    "bench_budget_scaling",  # search quality vs budget (monotone axes)
 ]
 
 
@@ -41,7 +42,10 @@ def main() -> None:
             failed.append(name)
             print(f"{name}.ERROR,0.0,{traceback.format_exc(limit=3)!r}")
     if failed:
-        raise SystemExit(f"benchmarks failed: {failed}")
+        # Nonzero exit so CI sees benchmark breakage; the per-module
+        # ERROR rows above carry the tracebacks.
+        print(f"benchmarks failed: {failed}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

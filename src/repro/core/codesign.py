@@ -7,6 +7,13 @@ Layer 4 (pnr.place_and_route)   — physical feasibility + footprint
 
 `design_for_network` runs Layers 2–4 for one network on a fixed pool;
 `run_codesign` runs the whole stack and returns the ecosystem + BASICs.
+
+Default search budgets are the raised, benchmark-justified ones
+(SAConfig.iterations=16, GAConfig.generations=24 — see
+benchmarks/bench_budget_scaling.py), not the paper's Table 4 toy
+settings; pass explicit configs to reproduce the paper budgets.  The
+per-network evaluation fan-out is controlled by `SAConfig.workers` /
+`SAConfig.executor` (or MOZART_WORKERS / MOZART_EXECUTOR).
 """
 from __future__ import annotations
 

@@ -185,6 +185,104 @@ def stage_envelope(options: Sequence[StageOption],
     return out
 
 
+# ---------------------------------------------------------------------------
+# Vectorized O((M+Q) log M) hull sweep (the "true" Algorithm 1, batched)
+# ---------------------------------------------------------------------------
+
+def _hull_of(slope: np.ndarray, icept: np.ndarray
+             ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Lower-envelope hull of a block of lines: (slopes, intercepts,
+    reversed breakpoints).  Monotone-chain build over slope-sorted lines
+    using the same cross-multiplied dominance predicate as
+    DynamicLowerHull._bad, so degenerate cases resolve identically."""
+    o = np.lexsort((icept, slope))
+    s, c = slope[o], icept[o]
+    keep: list[int] = []
+    for j in range(s.size):
+        if keep and s[keep[-1]] == s[j]:
+            continue                     # equal slope: lower intercept won
+        while len(keep) >= 2:
+            i1, i2 = keep[-2], keep[-1]
+            if ((c[j] - c[i1]) * (s[i2] - s[i1])
+                    <= (c[i2] - c[i1]) * (s[j] - s[i1])):
+                keep.pop()               # middle line everywhere dominated
+            else:
+                break
+        keep.append(j)
+    hs, hc = s[keep], c[keep]
+    # Line i beats line i+1 for T >= bx[i]; hull validity makes bx
+    # decreasing in i, so store it reversed (ascending) for searchsorted.
+    bxr = ((hc[:-1] - hc[1:]) / (hs[1:] - hs[:-1]))[::-1]
+    return hs, hc, bxr
+
+
+def _hull_eval(hs: np.ndarray, hc: np.ndarray, bxr: np.ndarray,
+               T: np.ndarray) -> np.ndarray:
+    """Envelope minimum of a prebuilt hull at each query T (vectorized
+    binary search over breakpoints; the ±1 neighbors are evaluated too so
+    breakpoint rounding can never miss the true minimum line)."""
+    n = hs.size
+    if n == 1:
+        return hs[0] * T + hc[0]
+    idx = (n - 1) - np.searchsorted(bxr, T, side="right")
+    lo = np.maximum(idx - 1, 0)
+    hi = np.minimum(idx + 1, n - 1)
+    return np.minimum(np.minimum(hs[idx] * T + hc[idx],
+                                 hs[lo] * T + hc[lo]),
+                      hs[hi] * T + hc[hi])
+
+
+def stage_envelope_sweep(t_cmp: np.ndarray, slope: np.ndarray,
+                         icept: np.ndarray,
+                         latencies: np.ndarray) -> np.ndarray:
+    """min over {j : t_cmp_j <= T} of (slope_j*T + icept_j), for every T
+    of an ascending latency grid — values only, O((M+Q) log M).
+
+    Options sorted by activation threshold make each query's active set a
+    prefix; a prefix [0, k) decomposes into <= log2(M) canonical
+    power-of-two blocks (Fenwick ranges), each with a lazily-built static
+    hull, queried by vectorized breakpoint binary search.  Total distinct
+    blocks across all prefixes is < 2M, so hull construction is
+    O(M log M) and the query sweep O(Q log M) — the asymptotics of paper
+    Algorithm 1, with the Q-side fully batched.
+    """
+    lat = np.asarray(latencies, dtype=np.float64)
+    out = np.full(lat.size, math.inf)
+    if t_cmp.size == 0 or lat.size == 0:
+        return out
+    order = np.argsort(t_cmp, kind="stable")
+    ts, ss, cs = t_cmp[order], slope[order], icept[order]
+    ks = np.searchsorted(ts, lat, side="right")   # active prefix per query
+
+    hulls: dict[tuple[int, int], tuple] = {}
+
+    def block(start: int, size: int) -> tuple:
+        h = hulls.get((start, size))
+        if h is None:
+            h = hulls[(start, size)] = _hull_of(ss[start:start + size],
+                                                cs[start:start + size])
+        return h
+
+    q = 0
+    while q < lat.size:
+        k = int(ks[q])
+        end = q + 1
+        while end < lat.size and ks[end] == k:
+            end += 1
+        if k > 0:
+            T = lat[q:end]
+            acc = np.full(T.size, math.inf)
+            pos, rem = 0, k
+            while rem:
+                size = 1 << (rem.bit_length() - 1)
+                acc = np.minimum(acc, _hull_eval(*block(pos, size), T))
+                pos += size
+                rem -= size
+            out[q:end] = acc
+        q = end
+    return out
+
+
 def stage_envelope_bruteforce(options, latencies, cost_weight=lambda o: 1.0):
     """O(M*Q) reference used by the property tests."""
     out = []
@@ -245,13 +343,26 @@ def _option_columns(opts: Sequence[StageOption]
             np.array([o.hw_cost_usd for o in opts], dtype=np.float64))
 
 
+# Per-stage (kept options x latencies) cell count above which the dense
+# masked-matrix sweep switches to the O((M+Q) log M) hull sweep.  The
+# dense path wins on small grids (pure array ops, no per-block Python);
+# measured crossover on the dev container is ~1e7 cells (M=2000, Q=5000:
+# 1.5x; M=5000, Q=20000: 4.2x for the sweep), and the dense matrix costs
+# 8*M*Q bytes, so switch at 2e6 cells (16 MB) to bound memory too.
+HULLVEC_MIN_CELLS = 2_000_000
+
+
 def _solve_pipeline_numpy(stage_options: Sequence[Sequence[StageOption]],
                           lat: list[float], objective: str,
-                          P: int) -> PipelineSolution | None:
-    """Dense vectorized iso-latency sweep: per stage, the envelope value
-    at every T is a masked (options x latencies) array min.  Values match
-    the hull engine (same slope/intercept formulation) to the last bit;
-    ties between exactly-equal options may pick a different argmin."""
+                          P: int,
+                          force_sweep: bool = False
+                          ) -> PipelineSolution | None:
+    """Vectorized iso-latency sweep.  Per stage, envelope values over the
+    grid come from either a masked (options x latencies) dense array min
+    or, above HULLVEC_MIN_CELLS (or with engine="hullvec"), the
+    O((M+Q) log M) prefix-block hull sweep.  Values match the hull engine
+    (same slope/intercept formulation) to the last bit; ties between
+    exactly-equal options may pick a different argmin."""
     latv = np.asarray(lat, dtype=np.float64)
     weighted = objective.endswith("_cost")
     cols = []
@@ -268,18 +379,27 @@ def _solve_pipeline_numpy(stage_options: Sequence[Sequence[StageOption]],
         slope, icept = p_static * w, e_dyn * w
         idx = np.flatnonzero(envelope_keep_mask(t_cmp, slope, icept))
         cols.append((t_cmp[idx], slope[idx], icept[idx], idx))
-    # One (sum-of-options x latencies) matrix for the whole pipeline;
-    # per-stage minima via segmented reduction.
-    tc = np.concatenate([c[0] for c in cols])
-    slope = np.concatenate([c[1] for c in cols])
-    icept = np.concatenate([c[2] for c in cols])
-    vals = slope[:, None] * latv[None, :]
-    vals += icept[:, None]
-    vals[tc[:, None] > latv[None, :]] = math.inf
-    starts = np.cumsum([0] + [c[0].size for c in cols[:-1]])
-    mins = np.minimum.reduceat(vals, starts, axis=0)
+    mins_rows: list[np.ndarray | None] = [None] * len(cols)
+    dense = [i for i, c in enumerate(cols)
+             if not force_sweep and c[0].size * latv.size < HULLVEC_MIN_CELLS]
+    for i, c in enumerate(cols):
+        if i not in dense:
+            mins_rows[i] = stage_envelope_sweep(c[0], c[1], c[2], latv)
+    if dense:
+        # One (sum-of-options x latencies) matrix for the dense stages;
+        # per-stage minima via segmented reduction.
+        tc = np.concatenate([cols[i][0] for i in dense])
+        slope = np.concatenate([cols[i][1] for i in dense])
+        icept = np.concatenate([cols[i][2] for i in dense])
+        vals = slope[:, None] * latv[None, :]
+        vals += icept[:, None]
+        vals[tc[:, None] > latv[None, :]] = math.inf
+        starts = np.cumsum([0] + [cols[i][0].size for i in dense[:-1]])
+        mins = np.minimum.reduceat(vals, starts, axis=0)
+        for i, row in zip(dense, mins):
+            mins_rows[i] = row
     total = np.zeros(len(lat))
-    for row in mins:                  # per-stage add order preserved
+    for row in mins_rows:             # per-stage add order preserved
         total += row
     if objective in ("edp", "edp_cost"):
         total = total * (latv * P)
@@ -318,7 +438,8 @@ def solve_pipeline(stage_options: Sequence[Sequence[StageOption]],
     n_stages: physical stage count (sum of repeats) when stage groups are
     compressed; defaults to len(stage_options).
     engine: auto (vectorized NumPy when the evaluation engine is on,
-    else hull) | numpy | hull | lichao.
+    else hull) | numpy | hullvec (numpy with the O((M+Q) log M) hull
+    sweep forced for every stage) | hull | lichao.
     """
     assert objective in ("energy", "edp", "energy_cost", "edp_cost")
     P = n_stages if n_stages is not None else len(stage_options)
@@ -332,8 +453,9 @@ def solve_pipeline(stage_options: Sequence[Sequence[StageOption]],
 
     if engine == "auto":
         engine = "numpy" if engine_enabled() else "hull"
-    if engine == "numpy":
-        return _solve_pipeline_numpy(stage_options, lat, objective, P)
+    if engine in ("numpy", "hullvec"):
+        return _solve_pipeline_numpy(stage_options, lat, objective, P,
+                                     force_sweep=engine == "hullvec")
 
     w = _cost_weight_fn(objective)
     envs = [stage_envelope(opts, lat, cost_weight=w, engine=engine)

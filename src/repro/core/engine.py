@@ -15,7 +15,13 @@ result-preserving for a fixed seed:
     stage options are additionally cached per *single chiplet* so a
     one-SKU neighbor move only enumerates options for the new SKU;
   * parallelism — `evaluate_pool`'s per-network loop can fan out over a
-    thread pool (`workers`, or MOZART_WORKERS).
+    thread pool or, since the GA inner loop is GIL-bound Python, a
+    spawn-safe process pool (`workers` / MOZART_WORKERS for the width,
+    `executor` / MOZART_EXECUTOR=thread|process for the kind).  Process
+    workers are persistent and keep their own cache shard (engine memo +
+    fusion option caches live for the worker's lifetime); results are
+    merged back into the parent engine's memo, and any failure to spawn
+    falls back to the thread path.
 
 `MOZART_DISABLE_ENGINE=1` (or `set_engine_enabled(False)`) restores the
 seed's scalar, uncached behavior — used by
@@ -23,10 +29,12 @@ benchmarks/bench_codesign_search.py for before/after timing.
 """
 from __future__ import annotations
 
+import atexit
 import math
+import multiprocessing
 import os
 import threading
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import astuple
 from typing import TYPE_CHECKING, Sequence
 
@@ -55,6 +63,29 @@ def _default_workers() -> int:
         return 0
 
 
+EXECUTOR_KINDS = ("thread", "process")
+
+
+def _default_executor() -> str:
+    kind = os.environ.get("MOZART_EXECUTOR", "thread").strip().lower()
+    return kind if kind in EXECUTOR_KINDS else "thread"
+
+
+def _process_worker(enabled: bool, pool: tuple, graph: "OperatorGraph",
+                    objective: str, req: "Requirement",
+                    ga: "GAConfig") -> "FusionResult | None":
+    """Entry point run inside a spawned worker process.
+
+    Evaluates one (pool, network) GA through the worker's own
+    DEFAULT_ENGINE, so each worker accumulates an independent cache shard
+    (engine memo + fusion option caches) that persists across tasks for
+    the life of the worker.  `enabled` carries the parent's engine switch
+    across the spawn boundary."""
+    set_engine_enabled(enabled)
+    return DEFAULT_ENGINE.evaluate_network(list(pool), graph, objective,
+                                           req, ga)
+
+
 class EvaluationEngine:
     """Memoized, optionally parallel evaluator for (pool, network) pairs.
 
@@ -64,10 +95,14 @@ class EvaluationEngine:
     latency requirement, and the full GA budget.
     """
 
-    def __init__(self, workers: int | None = None):
+    def __init__(self, workers: int | None = None,
+                 executor: str | None = None):
         self.workers = _default_workers() if workers is None else workers
+        self.executor = _default_executor() if executor is None else executor
         self._cache: dict[tuple, "FusionResult | None"] = {}
         self._lock = threading.Lock()
+        self._procpool: ProcessPoolExecutor | None = None
+        self._procpool_size = 0
         self.hits = 0
         self.misses = 0
 
@@ -83,6 +118,75 @@ class EvaluationEngine:
             self._cache.clear()
             self.hits = 0
             self.misses = 0
+
+    # -- process-pool plumbing -----------------------------------------
+
+    def _ensure_process_pool(self, n: int) -> ProcessPoolExecutor:
+        """Persistent spawn-context pool (created once, reused across SA
+        iterations so the per-worker spawn + import cost is paid once and
+        worker cache shards keep accumulating)."""
+        if self._procpool is None or self._procpool_size < n:
+            if self._procpool is not None:
+                self._procpool.shutdown(wait=False, cancel_futures=True)
+            # spawn, not fork: fork is unsafe under threads/JAX and the
+            # workers must start from a clean interpreter state.
+            ctx = multiprocessing.get_context("spawn")
+            self._procpool = ProcessPoolExecutor(max_workers=n,
+                                                 mp_context=ctx)
+            self._procpool_size = n
+            atexit.register(self._shutdown_process_pool)
+        return self._procpool
+
+    def _shutdown_process_pool(self) -> None:
+        if self._procpool is not None:
+            # wait=True: a clean join keeps this from racing
+            # concurrent.futures' own interpreter-exit hook.
+            self._procpool.shutdown(wait=True, cancel_futures=True)
+            self._procpool = None
+            self._procpool_size = 0
+
+    def _map_process(self, pool: Sequence["Chiplet"],
+                     networks: dict[str, "OperatorGraph"],
+                     names: list[str], objective: str,
+                     reqs: dict[str, "Requirement"], ga: "GAConfig",
+                     n_workers: int) -> "list[FusionResult | None] | None":
+        """Fan cache misses out over the process pool; None = could not
+        use processes (caller falls back to the thread path)."""
+        from .fusion import Requirement
+        keys = {name: self._key(pool, networks[name], objective,
+                                reqs.get(name, Requirement()), ga)
+                for name in names}
+        results: dict[str, "FusionResult | None"] = {}
+        miss: list[str] = []
+        with self._lock:
+            for name in names:
+                if keys[name] in self._cache:
+                    self.hits += 1
+                    results[name] = self._cache[keys[name]]
+                else:
+                    miss.append(name)
+        if miss:
+            try:
+                ex = self._ensure_process_pool(n_workers)
+                futs = {name: ex.submit(
+                    _process_worker, engine_enabled(), tuple(pool),
+                    networks[name], objective,
+                    reqs.get(name, Requirement()), ga) for name in miss}
+                got = {name: f.result() for name, f in futs.items()}
+            except Exception:            # spawn/pickle failure: thread path
+                self._shutdown_process_pool()
+                return None
+            with self._lock:
+                for name in miss:
+                    key = keys[name]
+                    if key in self._cache:   # racing caller filled it
+                        self.hits += 1
+                        results[name] = self._cache[key]
+                    else:
+                        self.misses += 1
+                        self._cache[key] = got[name]
+                        results[name] = got[name]
+        return [results[n] for n in names]
 
     # -- evaluation ----------------------------------------------------
 
@@ -113,21 +217,28 @@ class EvaluationEngine:
                       objective: str,
                       reqs: dict[str, "Requirement"] | None,
                       ga: "GAConfig",
-                      workers: int | None = None
+                      workers: int | None = None,
+                      executor: str | None = None
                       ) -> tuple[float, dict[str, "FusionResult"]]:
         """(geomean objective value, per-network best design)."""
         from .fusion import Requirement
         reqs = reqs or {}
         names = list(networks)
         n_workers = self.workers if workers is None else workers
+        kind = self.executor if executor is None else executor
 
         def one(name: str) -> "FusionResult | None":
             return self.evaluate_network(pool, networks[name], objective,
                                          reqs.get(name, Requirement()), ga)
 
+        results: "list[FusionResult | None] | None" = None
         if n_workers > 1 and len(names) > 1:
-            with ThreadPoolExecutor(max_workers=n_workers) as ex:
-                results = list(ex.map(one, names))
+            if kind == "process":
+                results = self._map_process(pool, networks, names,
+                                            objective, reqs, ga, n_workers)
+            if results is None:
+                with ThreadPoolExecutor(max_workers=n_workers) as ex:
+                    results = list(ex.map(one, names))
         else:
             results = [one(n) for n in names]
 

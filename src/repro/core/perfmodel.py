@@ -396,6 +396,39 @@ def enumerate_stage_options(
     return out
 
 
+def enumerate_stage_options_by_chiplet(
+        ops: Sequence[Operator],
+        chiplets: Sequence[Chiplet],
+        memories: Sequence[MemoryType] = MEMORY_POOL,
+        batches: Sequence[int] = BATCH_OPTIONS,
+        tps: Sequence[int] = TP_OPTIONS,
+        name: str = "",
+        fixed_batch: int | None = None,
+        max_mem_units: int = 8,
+        cost_fn: Callable[[StageConfig], float] | None = None,
+        repeat: int = 1) -> dict[Chiplet, tuple[StageOption, ...]]:
+    """One `evaluate_group_batch` call covering several chiplet SKUs at
+    once, split back per SKU.
+
+    `stage_config_grid` emits each chiplet's configs contiguously and the
+    batched evaluation is row-wise element-wise, so every per-SKU slice is
+    bit-identical to a separate single-SKU `enumerate_stage_options` call.
+    This is the population-batch entry point: the Layer-2 GA enumerates
+    all missing (fusion group, SKU) pairs of a whole genome population
+    through it instead of one call per SKU.
+    """
+    opts = enumerate_stage_options(ops, chiplets, memories=memories,
+                                   batches=batches, tps=tps, name=name,
+                                   fixed_batch=fixed_batch,
+                                   max_mem_units=max_mem_units,
+                                   vectorize=True, cost_fn=cost_fn,
+                                   repeat=repeat)
+    out: dict[Chiplet, list[StageOption]] = {c: [] for c in chiplets}
+    for o in opts:
+        out[o.cfg.chiplet].append(o)
+    return {c: tuple(v) for c, v in out.items()}
+
+
 def is_memory_bound(op: Operator, chiplet: Chiplet, mem: MemoryType,
                     batch: int = 1) -> bool:
     """Insight 1 classifier: does this operator saturate bandwidth before

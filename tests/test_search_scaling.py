@@ -1,0 +1,241 @@
+"""PR-2 regressions: population-batched GA parity, process-pool
+evaluate_pool, the O((M+Q) log M) vectorized hull sweep, raised default
+budgets, and the benchmark-gate plumbing (run.py exit codes, compare.py
+thresholds)."""
+import json
+import math
+import os
+import random
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import engine, operators
+from repro.core.chiplets import Chiplet, default_pool
+from repro.core.convexhull import solve_pipeline, stage_envelope_sweep
+from repro.core.fusion import (GAConfig, _chiplet_option_cache,
+                               clear_option_caches, groups_from_genome,
+                               optimize_fusion, prefetch_population_options,
+                               _roofline_seed)
+from repro.core.memory import HBM3
+from repro.core.perfmodel import StageConfig, StageOption
+from repro.core.pool import SAConfig, _neighbor, evaluate_pool
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _engine_state():
+    was = engine.engine_enabled()
+    engine.set_engine_enabled(True)
+    engine.clear_all_caches()
+    yield
+    engine.set_engine_enabled(was)
+    engine.clear_all_caches()
+
+
+def _graphs():
+    ws = operators.paper_workloads(seq=512)
+    return {"resnet50": ws["resnet50"],
+            "opt66b_decode": ws["opt66b_decode"]}
+
+
+# --- population-batched GA == scalar GA -------------------------------------
+
+def test_population_batched_ga_matches_scalar_fixed_seed():
+    """Equal budget, equal seed: the population-batched engine GA must
+    return the scalar GA's best design exactly."""
+    g = _graphs()["resnet50"]
+    cfg = GAConfig(population=6, generations=3)
+    engine.set_engine_enabled(False)
+    engine.clear_all_caches()
+    scalar = optimize_fusion(g, default_pool(), objective="energy", cfg=cfg)
+    engine.set_engine_enabled(True)
+    engine.clear_all_caches()
+    batched = optimize_fusion(g, default_pool(), objective="energy",
+                              cfg=cfg)
+    assert scalar is not None and batched is not None
+    assert scalar.value == batched.value
+    assert scalar.genome == batched.genome
+    assert [o.cfg.label for o in scalar.solution.stages] == \
+           [o.cfg.label for o in batched.solution.stages]
+
+
+def test_prefetch_fills_per_sku_option_cache():
+    g = _graphs()["opt66b_decode"]
+    cfg = GAConfig(population=4, generations=1)
+    pool = default_pool()[:3]
+    clear_option_caches()
+    seed = _roofline_seed(g, pool, fuse=True)
+    prefetch_population_options(g, [seed], pool, cfg)
+    n_groups = len(groups_from_genome(g, seed))
+    assert len(_chiplet_option_cache) == n_groups * len(pool)
+    # idempotent: a second prefetch enumerates nothing new
+    prefetch_population_options(g, [seed], pool, cfg)
+    assert len(_chiplet_option_cache) == n_groups * len(pool)
+
+
+# --- vectorized hull sweep ---------------------------------------------------
+
+def test_hull_sweep_exact_vs_dense_bruteforce():
+    for seed in range(60):
+        rng = random.Random(seed)
+        m, q = rng.randint(1, 80), rng.randint(1, 80)
+        tc = np.array([rng.uniform(0.0, 10.0) for _ in range(m)])
+        sl = np.array([rng.uniform(0.0, 5.0) for _ in range(m)])
+        ic = np.array([rng.uniform(-10.0, 100.0) for _ in range(m)])
+        lat = np.array(sorted(rng.uniform(0.01, 15.0) for _ in range(q)))
+        got = stage_envelope_sweep(tc, sl, ic, lat)
+        want = np.where(tc[:, None] <= lat[None, :],
+                        sl[:, None] * lat[None, :] + ic[:, None],
+                        np.inf).min(axis=0)
+        assert np.array_equal(got, want), seed
+
+
+def _rand_option(rng):
+    cfg = StageConfig(Chiplet(), HBM3, 1, 1, 1)
+    return StageOption(t_cmp=rng.uniform(0.05, 10.0),
+                       e_dyn=rng.uniform(0.1, 100.0),
+                       p_static=rng.uniform(0.01, 5.0),
+                       hw_cost_usd=rng.uniform(1.0, 1000.0), cfg=cfg)
+
+
+def test_solve_pipeline_hullvec_matches_hull_and_numpy():
+    for seed in range(30):
+        rng = random.Random(seed)
+        stages = [[_rand_option(rng) for _ in range(rng.randint(1, 15))]
+                  for _ in range(rng.randint(1, 5))]
+        lat = sorted(rng.uniform(0.01, 15.0)
+                     for _ in range(rng.randint(1, 25)))
+        for obj in ("energy", "edp", "energy_cost", "edp_cost"):
+            v = solve_pipeline(stages, lat, objective=obj, engine="hullvec")
+            h = solve_pipeline(stages, lat, objective=obj, engine="hull")
+            n = solve_pipeline(stages, lat, objective=obj, engine="numpy")
+            assert (v is None) == (h is None) == (n is None)
+            if v is not None:
+                assert v.value == h.value == n.value
+                assert v.T == h.T == n.T
+
+
+# --- process/thread executors ------------------------------------------------
+
+def test_evaluate_pool_thread_executor_matches_serial():
+    graphs = _graphs()
+    ga = GAConfig(population=4, generations=1)
+    pool = default_pool()[:3]
+    s0, per0 = engine.EvaluationEngine(workers=0).evaluate_pool(
+        pool, graphs, "energy", None, ga)
+    s1, per1 = engine.EvaluationEngine(
+        workers=2, executor="thread").evaluate_pool(
+        pool, graphs, "energy", None, ga)
+    assert s0 == s1
+    assert {n: r.value for n, r in per0.items()} == \
+           {n: r.value for n, r in per1.items()}
+
+
+def test_evaluate_pool_process_executor_matches_serial():
+    """MOZART_WORKERS>1 with the spawn-safe process executor returns
+    results identical to serial (and falls back to threads rather than
+    failing if the platform cannot spawn)."""
+    graphs = _graphs()
+    ga = GAConfig(population=4, generations=1)
+    pool = default_pool()[:3]
+    s0, per0 = engine.EvaluationEngine(workers=0).evaluate_pool(
+        pool, graphs, "energy", None, ga)
+    ev = engine.EvaluationEngine(workers=2, executor="process")
+    try:
+        s1, per1 = ev.evaluate_pool(pool, graphs, "energy", None, ga)
+        # results land in the parent memo: a repeat call is all hits
+        s2, _ = ev.evaluate_pool(pool, graphs, "energy", None, ga)
+    finally:
+        ev._shutdown_process_pool()
+    assert s0 == s1 == s2
+    assert ev.hits >= len(graphs)
+    assert {n: r.value for n, r in per0.items()} == \
+           {n: r.value for n, r in per1.items()}
+
+
+def test_executor_env_knobs(monkeypatch):
+    monkeypatch.setenv("MOZART_WORKERS", "3")
+    monkeypatch.setenv("MOZART_EXECUTOR", "process")
+    ev = engine.EvaluationEngine()
+    assert ev.workers == 3 and ev.executor == "process"
+    monkeypatch.setenv("MOZART_EXECUTOR", "bogus")
+    monkeypatch.setenv("MOZART_WORKERS", "not-a-number")
+    ev = engine.EvaluationEngine()
+    assert ev.workers == 0 and ev.executor == "thread"
+
+
+def test_evaluate_pool_accepts_executor_kwarg():
+    graphs = _graphs()
+    ga = GAConfig(population=4, generations=1)
+    s0, _ = evaluate_pool(default_pool()[:3], graphs, "energy", ga=ga,
+                          workers=2, executor="thread")
+    s1, _ = evaluate_pool(default_pool()[:3], graphs, "energy", ga=ga)
+    assert s0 == s1
+
+
+# --- SA neighbor move --------------------------------------------------------
+
+def test_neighbor_1000_mutations_never_shrinks_pool():
+    rng = random.Random(123)
+    pool = default_pool()[:4]
+    size = len(pool)
+    for _ in range(1000):
+        pool = _neighbor(pool, rng)
+        assert len(pool) == size
+        assert len(set(pool)) == size
+
+
+# --- raised default budgets --------------------------------------------------
+
+def test_default_budgets_raised_past_paper_toy_settings():
+    """PAPER Table 4 is 5 SA iterations and 10 GA generations; the
+    defaults were raised on the strength of bench_budget_scaling data."""
+    assert SAConfig().iterations > 5
+    assert GAConfig().generations > 10
+    # the escape hatch to the exact-seed scalar path must still exist
+    assert hasattr(engine, "set_engine_enabled")
+    assert os.environ.get("MOZART_DISABLE_ENGINE", "0") in ("0", "1")
+
+
+# --- benchmark harness plumbing ----------------------------------------------
+
+def test_benchmarks_run_exits_nonzero_on_module_failure():
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only",
+         "no_such_benchmark_module"],
+        cwd=REPO_ROOT, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"}, timeout=120)
+    assert proc.returncode != 0
+    assert "benchmarks failed" in proc.stderr
+
+
+def test_compare_gate_thresholds(tmp_path):
+    sys.path.insert(0, REPO_ROOT)
+    try:
+        from benchmarks.compare import check
+    finally:
+        sys.path.pop(0)
+    baselines = {"codesign_search": {"min_speedup": 2.0},
+                 "budget_scaling": {"require_monotone": True}}
+
+    def write(speedup, identical, mono):
+        (tmp_path / "BENCH_codesign_search.json").write_text(json.dumps(
+            {"speedup": speedup, "identical_best_design": identical}))
+        (tmp_path / "BENCH_budget_scaling.json").write_text(json.dumps(
+            {"monotone_sa": mono, "monotone_ga": mono,
+             "sa_levels": [], "ga_levels": []}))
+
+    write(5.0, True, True)
+    assert check(str(tmp_path), baselines) == []
+    write(1.2, True, True)           # speedup regression
+    assert any("regressed" in f for f in check(str(tmp_path), baselines))
+    write(5.0, False, True)          # parity break
+    assert any("identical" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, False)          # non-monotone budget scaling
+    assert any("monotone" in f for f in check(str(tmp_path), baselines))
+    assert any("missing artifact" in f
+               for f in check(str(tmp_path / "nope"), baselines))
