@@ -1,54 +1,80 @@
-"""Quickstart: run the Mozart codesign stack on one network and deploy
-the result as an execution policy.
+"""Quickstart: one declarative spec in, one deployment artifact out.
+
+`mozart.compile` runs the four-layer codesign stack (SA pool -> GA
+fusion -> iso-latency convex hull -> P&R) for every network of the
+spec, and the resulting `Deployment` is a reusable JSON artifact:
+designs, execution policies, and baseline comparisons all round-trip
+bit-exact through `save`/`load`, and `repro.launch.serve --policy`
+consumes the policy directly.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+
+import os
+import tempfile
+
+from repro import mozart
 from repro.core import operators
-from repro.core.chiplets import default_pool
-from repro.core.codesign import design_for_network
-from repro.core.costmodel import system_cost
-from repro.core.fusion import GAConfig, Requirement
-from repro.core.policy import policy_from_design
+from repro.core.fusion import GAConfig
+from repro.core.pool import SAConfig
 
 
 def main() -> None:
-    # 1. lower a network to Mozart's operator IR (OPT-1.3B decode here)
-    graph = operators.lm_operator_graph(
-        operators.OPT_1_3B, seq=2048, phase="decode", cache_len=2048)
-    print(f"network: {graph.network}  "
-          f"ops={len(graph.operators)} (x repeats)  "
-          f"GFLOPs/token={graph.total_flops / 1e9:.1f}")
+    # 1. declare WHAT to build: two phases of OPT-1.3B serving under the
+    #    chatbot scenario (TTFT 2.5 s / TPOT 150 ms, energy-x-cost
+    #    metric of record).  Budgets here are trimmed for a fast demo;
+    #    drop the sa/ga overrides to search at the full defaults.
+    spec = mozart.MozartSpec(
+        networks={
+            "opt1.3b_prefill": operators.lm_operator_graph(
+                operators.OPT_1_3B, seq=2048, phase="prefill"
+            ),
+            "opt1.3b_decode": operators.lm_operator_graph(
+                operators.OPT_1_3B, seq=2048, phase="decode", cache_len=2048
+            ),
+        },
+        scenario="chatbot",
+        pool_size=4,
+        sa=SAConfig(iterations=3, inner_ga=GAConfig(population=4, generations=1)),
+        ga=GAConfig(population=8, generations=5),
+        baselines=("best_homogeneous",),
+    )
 
-    # 2. layers 2-4: GA fusion + iso-latency convex hull + place&route,
-    #    under a 150 ms TPOT requirement, cost-aware objective
-    design = design_for_network(
-        graph, default_pool(), objective="energy_cost",
-        req=Requirement(tpot=0.15),
-        ga=GAConfig(population=8, generations=5))
-    sol = design.fusion.solution
-    print(f"\nBASIC: E/token={sol.energy_per_sample * 1e3:.3f} mJ  "
-          f"TPOT={sol.delay_e2e * 1e3:.2f} ms  "
-          f"throughput={sol.throughput:.0f} tok/s  hw=${sol.hw_cost_usd:.0f}")
-    print(f"P&R: {design.pnr.width:.1f}x{design.pnr.height:.1f} mm "
-          f"(feasible={design.pnr.feasible}, "
-          f"wire={design.pnr.wirelength_mm:.0f} mm)")
-    cost = system_cost(sol.stages, volume=1e6,
-                       n_networks_sharing={
-                           o.cfg.chiplet.label: 200 for o in sol.stages})
-    print(f"unit cost: die=${cost.die:.0f} pkg=${cost.packaging:.0f} "
-          f"nre/unit=${cost.nre_per_unit:.2f}")
+    # 2. compile: spec -> Deployment (the whole ecosystem).
+    dep = mozart.compile(spec)
+    print(f"objective: {dep.objective}")
+    print(f"pool: {', '.join(dep.pool_labels())}")
 
-    # 3. the solution as stage assignments
-    print("\nstage plan (operator-level heterogeneity):")
-    for st in sol.stages:
-        print(f"  {st.group_name[:44]:44s} -> {st.cfg.label} "
-              f"(x{st.repeat})")
+    # 3. paper-style reductions: per-network values + baseline ratios.
+    summary = dep.summary()
+    for name, row in summary["per_network"].items():
+        vs = row.get("vs_best_homogeneous")
+        vs_s = f"{vs:.2f}x vs best single-SKU" if vs else "no baseline"
+        mj = row["energy_per_sample"] * 1e3
+        line = (
+            f"  {name}: value={row['value']:.4g}  E/sample={mj:.3f} mJ  "
+            f"throughput={row['throughput']:.0f}/s  ({vs_s})"
+        )
+        print(line)
+    print(f"geomean value: {summary['geomean_value']:.4g}")
+    print(f"chiplet reuse: {summary['chiplet_reuse']}")
 
-    # 4. deploy: execution policy for the JAX substrate
-    pol = policy_from_design(design)
-    print("\nexecution policy:", pol.fusion_flags(),
-          f"attn_batch={pol.batch_agnostic_batch}",
-          f"mlp_batch={pol.batch_sensitive_batch}")
+    # 4. the artifact round-trips: a codesign run is a reusable file.
+    with tempfile.TemporaryDirectory() as tmp:
+        path = dep.save(os.path.join(tmp, "deployment.json"))
+        dep2 = mozart.load(path)
+        assert dep2.to_json() == dep.to_json(), "artifact must round-trip"
+        print(f"artifact round-trip OK ({os.path.getsize(path)} bytes)")
+
+    # 5. deploy: the decode policy the serving engine consumes
+    #    (serve --policy deployment.json --policy-network opt1.3b_decode).
+    pol = dep.policy("opt1.3b_decode")
+    line = (
+        f"decode policy: fusion={pol.fusion_flags()}  "
+        f"attn_batch={pol.batch_agnostic_batch}  "
+        f"mlp_batch={pol.batch_sensitive_batch}  tp={pol.tp_degree}"
+    )
+    print(line)
 
 
 if __name__ == "__main__":

@@ -3,6 +3,10 @@ corpus for a few hundred steps with checkpointing, gradient compression,
 and (if >1 device) a data+tensor-parallel mesh.
 
     PYTHONPATH=src python examples/train_smollm.py --steps 300
+
+An optional Mozart deployment artifact drives the microbatch split:
+`--policy deployment.json` divides the global batch by the policy's
+batch-sensitive microbatch (Insight 2 applied to the training loop).
 """
 import argparse
 import tempfile
@@ -18,7 +22,29 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--policy", default=None, metavar="DEPLOYMENT_JSON",
+                    help="mozart artifact; microbatch count follows the "
+                         "policy's batch_sensitive_batch")
+    ap.add_argument("--policy-network", default=None,
+                    help="which network's policy to take from a "
+                         "multi-network artifact")
     args = ap.parse_args()
+
+    microbatches = 2
+    if args.policy:
+        from repro.mozart import load_policy
+        pol = load_policy(args.policy, args.policy_network)
+        # Smallest microbatch count that divides the global batch AND
+        # keeps each microbatch <= the policy's batch-sensitive size
+        # (the training loop reshapes to (microbatches, batch/m, ...)).
+        sens = max(1, pol.batch_sensitive_batch)
+        microbatches = next(m for m in range(1, args.batch + 1)
+                            if args.batch % m == 0
+                            and args.batch // m <= sens)
+        print(f"[train] policy {pol.network}: "
+              f"batch_sensitive_batch={pol.batch_sensitive_batch} -> "
+              f"{microbatches} microbatches of "
+              f"{args.batch // microbatches}")
 
     mcfg = configs.get_smoke_config("smollm-135m")
     ocfg = OptimizerConfig(lr=1e-3, warmup_steps=20,
@@ -28,7 +54,8 @@ def main() -> None:
     with tempfile.TemporaryDirectory() as ckpt:
         tcfg = TrainConfig(steps=args.steps, log_every=25,
                            ckpt_every=100, ckpt_dir=ckpt,
-                           microbatches=2, grad_compression=True)
+                           microbatches=microbatches,
+                           grad_compression=True)
         out = train(mcfg, ocfg, tcfg, dcfg)
     first, last = out["losses"][0][1], out["losses"][-1][1]
     print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "

@@ -22,7 +22,10 @@ from .perfmodel import (StageConfig, StageOption, StageOptionSet,
                         evaluate_group_batch, gpu_eval, is_memory_bound,
                         scale_option)
 from .pnr import PnrResult, place_and_route
-from .policy import ExecutionPolicy, policy_from_design
+from .policy import (ExecutionPolicy, OperatorPolicy, policy_from_design,
+                     policy_from_json)
 from .pool import PoolResult, SAConfig, anneal_pool, evaluate_pool
+from .scenarios import (SCENARIOS, Scenario, SpecDecodeScenario,
+                        get_scenario)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -133,6 +133,15 @@ class Chiplet:
         return (f"{self.dataflow}-pe{self.pe_dim}"
                 f"-glb{self.glb_bytes // 1024}K-{self.bonding}")
 
+    def to_dict(self) -> dict:
+        return {"dataflow": self.dataflow, "pe_scale": self.pe_scale,
+                "glb_scale": self.glb_scale, "bonding": self.bonding}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Chiplet":
+        return Chiplet(dataflow=d["dataflow"], pe_scale=d["pe_scale"],
+                       glb_scale=d["glb_scale"], bonding=d["bonding"])
+
 
 def full_design_space() -> list[Chiplet]:
     """All 96 chiplet configurations (3 dataflows x 4 PE x 4 GLB x 2 bond)."""

@@ -5,8 +5,15 @@ Layer 2 (fusion.optimize_fusion)— GA over tensor fusion + memory allocation
 Layer 3 (convexhull.solve_pipeline) — iso-latency + modified convex hull
 Layer 4 (pnr.place_and_route)   — physical feasibility + footprint
 
+This module is the *mechanism* layer.  The supported entry point for
+running the stack is the `repro.mozart` facade: declare a `MozartSpec`
+(networks, scenario, objective, budgets) and call
+`mozart.compile(spec)`, which drives the functions below and returns a
+serializable `Deployment` artifact (designs, policies, baselines).
+
 `design_for_network` runs Layers 2–4 for one network on a fixed pool;
 `run_codesign` runs the whole stack and returns the ecosystem + BASICs.
+Both remain public for low-level/benchmark use.
 
 Default search budgets are the raised, benchmark-justified ones
 (SAConfig.iterations=16, GAConfig.generations=24 — see
@@ -18,7 +25,7 @@ per-network evaluation fan-out is controlled by `SAConfig.workers` /
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Iterable, Sequence
 
 from .chiplets import Chiplet, default_pool, full_design_space
 from .engine import DEFAULT_ENGINE, EvaluationEngine, engine_enabled
@@ -42,6 +49,16 @@ class BasicDesign:
         m["pnr_feasible"] = float(self.pnr.feasible)
         return m
 
+    def to_dict(self) -> dict:
+        return {"network": self.network, "fusion": self.fusion.to_dict(),
+                "pnr": self.pnr.to_dict()}
+
+    @staticmethod
+    def from_dict(d: dict) -> "BasicDesign":
+        return BasicDesign(network=d["network"],
+                           fusion=FusionResult.from_dict(d["fusion"]),
+                           pnr=PnrResult.from_dict(d["pnr"]))
+
 
 @dataclasses.dataclass
 class CodesignResult:
@@ -53,13 +70,33 @@ class CodesignResult:
         return [c.label for c in self.pool]
 
     def chiplet_reuse(self) -> dict[str, int]:
-        """How many BASIC designs use each pool chiplet (NRE amortization)."""
-        reuse: dict[str, int] = {}
-        for d in self.designs.values():
-            used = {o.cfg.chiplet.label for o in d.fusion.solution.stages}
-            for u in used:
-                reuse[u] = reuse.get(u, 0) + 1
-        return reuse
+        return chiplet_reuse(self.designs.values())
+
+    def to_dict(self) -> dict:
+        return {"pool": [c.to_dict() for c in self.pool],
+                "designs": {n: d.to_dict()
+                            for n, d in self.designs.items()},
+                "objective": self.objective}
+
+    @staticmethod
+    def from_dict(d: dict) -> "CodesignResult":
+        return CodesignResult(
+            pool=[Chiplet.from_dict(c) for c in d["pool"]],
+            designs={n: BasicDesign.from_dict(b)
+                     for n, b in d["designs"].items()},
+            objective=d["objective"])
+
+
+def chiplet_reuse(designs: Iterable[BasicDesign]) -> dict[str, int]:
+    """How many BASIC designs use each pool chiplet (NRE amortization).
+    Keys appear in pipeline-stage order (deterministic across runs)."""
+    reuse: dict[str, int] = {}
+    for d in designs:
+        used = dict.fromkeys(o.cfg.chiplet.label
+                             for o in d.fusion.solution.stages)
+        for u in used:
+            reuse[u] = reuse.get(u, 0) + 1
+    return reuse
 
 
 def design_for_network(graph: OperatorGraph,
@@ -139,8 +176,14 @@ def best_homogeneous_design(graph: OperatorGraph,
                             objective: str = "energy",
                             req: Requirement | None = None,
                             ga: GAConfig | None = None) -> BasicDesign | None:
-    """The best single-SKU accelerator — the fair homogeneous baseline."""
-    ga = ga or GAConfig(population=6, generations=3)
+    """The best single-SKU accelerator — the fair homogeneous baseline.
+
+    The baseline runs at the caller's GA budget (default: the full
+    `GAConfig()` budget) so it is searched as hard as the heterogeneous
+    design it is compared against; a reduced budget here would bias the
+    comparison in Mozart's favor.
+    """
+    ga = ga if ga is not None else GAConfig()
     cands = list(candidates) if candidates is not None else default_pool()
     best: BasicDesign | None = None
     for c in cands:

@@ -323,6 +323,23 @@ class PipelineSolution:
                 "edp_cost": ec * d, "latency_e2e": d,
                 "throughput": self.throughput, "hw_cost_usd": c, "T": self.T}
 
+    def to_dict(self) -> dict:
+        return {"objective": self.objective, "value": self.value,
+                "T": self.T, "energy_per_sample": self.energy_per_sample,
+                "delay_e2e": self.delay_e2e,
+                "hw_cost_usd": self.hw_cost_usd,
+                "throughput": self.throughput,
+                "stages": [s.to_dict() for s in self.stages]}
+
+    @staticmethod
+    def from_dict(d: dict) -> "PipelineSolution":
+        return PipelineSolution(
+            objective=d["objective"], value=d["value"], T=d["T"],
+            energy_per_sample=d["energy_per_sample"],
+            delay_e2e=d["delay_e2e"], hw_cost_usd=d["hw_cost_usd"],
+            throughput=d["throughput"],
+            stages=[StageOption.from_dict(s) for s in d["stages"]])
+
 
 def _cost_weight_fn(objective: str) -> Callable[[StageOption], float]:
     if objective.endswith("_cost"):

@@ -49,11 +49,28 @@ class Requirement:
         vals = [v for v in (self.ttft, self.tpot, self.e2e) if v is not None]
         return min(vals) if vals else None
 
+    def to_dict(self) -> dict:
+        return {"ttft": self.ttft, "tpot": self.tpot, "e2e": self.e2e}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Requirement":
+        return Requirement(ttft=d.get("ttft"), tpot=d.get("tpot"),
+                           e2e=d.get("e2e"))
+
 
 @dataclasses.dataclass(frozen=True)
 class Genome:
     boundaries: tuple[int, ...]   # len N-1
     mem_genes: tuple[int, ...]    # len N, index into MEMORY_POOL
+
+    def to_dict(self) -> dict:
+        return {"boundaries": list(self.boundaries),
+                "mem_genes": list(self.mem_genes)}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Genome":
+        return Genome(boundaries=tuple(d["boundaries"]),
+                      mem_genes=tuple(d["mem_genes"]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +80,18 @@ class FusionGroup:
     memory: MemoryType
     name: str
 
+    def to_dict(self) -> dict:
+        return {"ops": [o.to_dict() for o in self.ops],
+                "repeat": self.repeat, "memory": self.memory.to_dict(),
+                "name": self.name}
+
+    @staticmethod
+    def from_dict(d: dict) -> "FusionGroup":
+        return FusionGroup(
+            ops=tuple(Operator.from_dict(o) for o in d["ops"]),
+            repeat=d["repeat"], memory=MemoryType.from_dict(d["memory"]),
+            name=d["name"])
+
 
 @dataclasses.dataclass
 class FusionResult:
@@ -70,6 +99,19 @@ class FusionResult:
     groups: list[FusionGroup]
     solution: PipelineSolution
     value: float
+
+    def to_dict(self) -> dict:
+        return {"genome": self.genome.to_dict(),
+                "groups": [g.to_dict() for g in self.groups],
+                "solution": self.solution.to_dict(), "value": self.value}
+
+    @staticmethod
+    def from_dict(d: dict) -> "FusionResult":
+        return FusionResult(
+            genome=Genome.from_dict(d["genome"]),
+            groups=[FusionGroup.from_dict(g) for g in d["groups"]],
+            solution=PipelineSolution.from_dict(d["solution"]),
+            value=d["value"])
 
 
 @dataclasses.dataclass
@@ -86,6 +128,17 @@ class GAConfig:
     latency_points: int = 48
     fixed_batch: int | None = None
     batches: tuple[int, ...] = BATCH_OPTIONS
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["batches"] = list(self.batches)
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "GAConfig":
+        d = dict(d)
+        d["batches"] = tuple(d.get("batches", BATCH_OPTIONS))
+        return GAConfig(**d)
 
 
 def forced_boundaries(graph: OperatorGraph) -> tuple[int, ...]:

@@ -32,6 +32,20 @@ class MemoryType:
     def energy_j(self, bytes_moved: float) -> float:
         return bytes_moved * 8.0 * self.pj_per_bit * 1e-12
 
+    def to_dict(self) -> dict:
+        """JSON form.  Stock pool members serialize as their name only;
+        custom memory types carry their full parameterization."""
+        stock = MEMORY_BY_NAME.get(self.name)
+        if stock == self:
+            return {"name": self.name}
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "MemoryType":
+        if set(d) == {"name"}:
+            return MEMORY_BY_NAME[d["name"]]
+        return MemoryType(**d)
+
 
 HBM3 = MemoryType("HBM3", bw_per_unit=819e9, capacity_per_unit=24e9,
                   pj_per_bit=3.9, usd_per_gb=15.0, phy_cost_usd=40.0,

@@ -61,6 +61,22 @@ class Operator:
         b = self.dram_bytes(batch)
         return f / max(b, 1.0)
 
+    def to_dict(self) -> dict:
+        return {"name": self.name, "kind": self.kind, "flops": self.flops,
+                "weight_bytes": self.weight_bytes,
+                "act_in_bytes": self.act_in_bytes,
+                "act_out_bytes": self.act_out_bytes,
+                "parallel_work": self.parallel_work,
+                "batch_scaling": self.batch_scaling,
+                "weight_reuse_divisor": self.weight_reuse_divisor}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Operator":
+        return Operator(**{k: d[k] for k in (
+            "name", "kind", "flops", "weight_bytes", "act_in_bytes",
+            "act_out_bytes", "parallel_work", "batch_scaling",
+            "weight_reuse_divisor")})
+
     def dram_bytes(self, batch: int = 1) -> float:
         """Bytes that must cross DRAM for one execution at `batch`."""
         w = self.weight_bytes / self.weight_reuse_divisor \
@@ -94,6 +110,18 @@ class OperatorGraph:
     def total_weight_bytes(self) -> float:
         return sum(o.weight_bytes * r
                    for o, r in zip(self.operators, self.repeats))
+
+    def to_dict(self) -> dict:
+        return {"network": self.network, "phase": self.phase,
+                "operators": [o.to_dict() for o in self.operators],
+                "repeats": list(self.repeats)}
+
+    @staticmethod
+    def from_dict(d: dict) -> "OperatorGraph":
+        return OperatorGraph(
+            network=d["network"], phase=d["phase"],
+            operators=tuple(Operator.from_dict(o) for o in d["operators"]),
+            repeats=tuple(d["repeats"]))
 
     def expand(self, max_ops: int | None = None) -> list[Operator]:
         out: list[Operator] = []

@@ -41,6 +41,19 @@ class StageConfig:
         return (f"{self.chiplet.label}|{self.memory.name}x{self.mem_units}"
                 f"|tp{self.tp}|b{self.batch}")
 
+    def to_dict(self) -> dict:
+        return {"chiplet": self.chiplet.to_dict(),
+                "memory": self.memory.to_dict(),
+                "mem_units": self.mem_units, "tp": self.tp,
+                "batch": self.batch}
+
+    @staticmethod
+    def from_dict(d: dict) -> "StageConfig":
+        return StageConfig(chiplet=Chiplet.from_dict(d["chiplet"]),
+                           memory=MemoryType.from_dict(d["memory"]),
+                           mem_units=d["mem_units"], tp=d["tp"],
+                           batch=d["batch"])
+
 
 @dataclasses.dataclass(frozen=True)
 class StageOption:
@@ -59,6 +72,22 @@ class StageOption:
         if t < self.t_cmp:
             return math.inf
         return self.e_dyn + self.p_static * t
+
+    def to_dict(self) -> dict:
+        return {"t_cmp": self.t_cmp, "e_dyn": self.e_dyn,
+                "p_static": self.p_static, "hw_cost_usd": self.hw_cost_usd,
+                "cfg": self.cfg.to_dict(), "group_name": self.group_name,
+                "flops_per_sample": self.flops_per_sample,
+                "repeat": self.repeat}
+
+    @staticmethod
+    def from_dict(d: dict) -> "StageOption":
+        return StageOption(
+            t_cmp=d["t_cmp"], e_dyn=d["e_dyn"], p_static=d["p_static"],
+            hw_cost_usd=d["hw_cost_usd"],
+            cfg=StageConfig.from_dict(d["cfg"]),
+            group_name=d["group_name"],
+            flops_per_sample=d["flops_per_sample"], repeat=d["repeat"])
 
 
 def _group_dram_bytes(ops: Sequence[Operator], glb_bytes: int,

@@ -38,6 +38,10 @@ class Placement:
     def center(self) -> tuple[float, float]:
         return (self.x + self.w / 2, self.y + self.h / 2)
 
+    @staticmethod
+    def from_dict(d: dict) -> "Placement":
+        return Placement(**d)
+
 
 @dataclasses.dataclass
 class PnrResult:
@@ -52,6 +56,17 @@ class PnrResult:
     extra_link_energy_pj_per_bit: float
     extra_hop_latency_ns: float
     reason: str = ""
+
+    def to_dict(self) -> dict:
+        # asdict deep-converts the nested Placements already
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "PnrResult":
+        d = dict(d)
+        d["placements"] = [Placement.from_dict(p)
+                           for p in d["placements"]]
+        return PnrResult(**d)
 
 
 def _rects_for(stages: Sequence[StageOption]) -> list[tuple[str, float]]:

@@ -7,6 +7,13 @@ deploys them as *execution policies* on the TPU substrate (DESIGN.md §2):
     the serving engine's microbatch scheduler;
   * tensor-parallel degree per stage drives sharding choices;
   * fusion groups map onto the fused Pallas kernels (flash-attention etc.).
+
+Policies are part of the `repro.mozart` deployment artifact: a compiled
+`Deployment` carries one `ExecutionPolicy` per network, the whole
+artifact round-trips through JSON (`ExecutionPolicy.to_json` /
+`policy_from_json`), and `repro.launch.serve --policy <artifact>`
+consumes it — fusion flags select the fused kernels, the batch split
+sets the engine's max/decode batch, and the TP degree feeds mesh setup.
 """
 from __future__ import annotations
 
@@ -24,6 +31,15 @@ class OperatorPolicy:
     memory: str
     chiplet: str
     fused: bool           # >1 operator in the group -> fused kernel
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "OperatorPolicy":
+        return OperatorPolicy(group=d["group"], batch=d["batch"],
+                              tp=d["tp"], memory=d["memory"],
+                              chiplet=d["chiplet"], fused=d["fused"])
 
 
 @dataclasses.dataclass
@@ -44,6 +60,12 @@ class ExecutionPolicy:
               if "attention" not in p.group and "scan" not in p.group]
         return max(bs) if bs else 1
 
+    @property
+    def tp_degree(self) -> int:
+        """Widest per-stage tensor-parallel degree — the model-axis size
+        the serving mesh must provide."""
+        return max((p.tp for p in self.operators), default=1)
+
     def fusion_flags(self) -> dict[str, bool]:
         """Which fused kernels the substrate should enable."""
         flags = {"flash_attention": False, "fused_mlp": False,
@@ -59,13 +81,36 @@ class ExecutionPolicy:
                 flags["fused_norm"] = True
         return flags
 
-    def to_json(self) -> str:
-        return json.dumps({
+    def to_dict(self) -> dict:
+        return {
             "network": self.network,
             "interval_s": self.interval_s,
-            "operators": [dataclasses.asdict(p) for p in self.operators],
+            "operators": [p.to_dict() for p in self.operators],
+            # Derived, re-checked on load; kept in the JSON so the
+            # artifact is self-describing for non-Python consumers.
             "fusion": self.fusion_flags(),
-        }, indent=2)
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "ExecutionPolicy":
+        pol = ExecutionPolicy(
+            network=d["network"], interval_s=d["interval_s"],
+            operators=[OperatorPolicy.from_dict(p)
+                       for p in d["operators"]])
+        want = d.get("fusion")
+        if want is not None and want != pol.fusion_flags():
+            raise ValueError(
+                f"policy fusion flags {want} do not match the flags "
+                f"derived from its operators {pol.fusion_flags()}")
+        return pol
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+
+def policy_from_json(text: str) -> ExecutionPolicy:
+    """Parse `ExecutionPolicy.to_json` output back (exact round-trip)."""
+    return ExecutionPolicy.from_dict(json.loads(text))
 
 
 def policy_from_design(design: BasicDesign) -> ExecutionPolicy:

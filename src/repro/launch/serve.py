@@ -1,10 +1,19 @@
 """Serving launcher: continuous-batching engine (optionally with
-speculative decoding) on synthetic requests.
+speculative decoding) on synthetic requests, optionally driven by a
+Mozart deployment artifact.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --smoke --requests 8 --max-new 16
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --smoke --specdec
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+        --smoke --policy deployment.json
+
+`--policy` accepts either a `mozart.compile(...).save()` deployment
+artifact or a bare `ExecutionPolicy.to_json` file and *applies* it:
+fusion flags select the fused kernels (flash_attention -> the Pallas
+flash-attention prefill path), the policy's batch split sets the
+engine's max/decode batch, and the TP degree feeds mesh setup.
 """
 from __future__ import annotations
 
@@ -15,9 +24,69 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.core.policy import ExecutionPolicy
 from repro.models import api, transformer
+from repro.models.config import ModelConfig
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.specdec import spec_decode_greedy
+
+
+def apply_policy(pol: ExecutionPolicy, mcfg: ModelConfig,
+                 max_batch: int, n_devices: int | None = None
+                 ) -> tuple[ModelConfig, dict, list[str]]:
+    """Lower an ExecutionPolicy onto the serving substrate.
+
+    Returns (model config, ServingEngine kwargs, log lines).  Pure —
+    no engine or mesh is constructed here — so the mapping is unit-
+    testable without JAX compilation.
+    """
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    lines: list[str] = []
+    flags = pol.fusion_flags()
+
+    applied = []
+    if flags["flash_attention"]:
+        mcfg = mcfg.replace(attn_impl="flash")
+        applied.append("flash_attention->attn_impl=flash")
+    # fused_mlp / fused_norm have no dedicated serving hook yet (XLA
+    # fuses both inline); they are recorded so the log shows the full
+    # policy even where the substrate has nothing to toggle.
+    for k in ("fused_mlp", "fused_norm"):
+        if flags[k]:
+            applied.append(f"{k}(advisory)")
+    lines.append(f"[serve] policy network={pol.network} "
+                 f"fusion flags: flash_attention={flags['flash_attention']} "
+                 f"fused_mlp={flags['fused_mlp']} "
+                 f"fused_norm={flags['fused_norm']} "
+                 f"applied=[{', '.join(applied) or 'none'}]")
+
+    # Insight 2's batch split: batch-sensitive stages (projections) set
+    # the engine-wide slot count, batch-agnostic stages (attention/scan)
+    # bound the lock-step decode batch.  The CLI --max-batch stays a cap
+    # (cache memory), the policy drives within it.
+    sens, agn = pol.batch_sensitive_batch, pol.batch_agnostic_batch
+    eng_batch = max(1, min(max_batch, sens))
+    dec_batch = max(1, min(eng_batch, agn))
+    lines.append(f"[serve] policy microbatch: max_batch {max_batch}->"
+                 f"{eng_batch} (batch_sensitive_batch={sens}), "
+                 f"decode_batch={dec_batch} (batch_agnostic_batch={agn})")
+
+    tp = pol.tp_degree
+    if tp > 1 and n_devices % tp == 0 and n_devices >= tp:
+        # The mesh is built for sharding-aware callers; the lock-step
+        # engine itself does not shard yet, and the log says so.
+        lines.append(f"[serve] policy tp={tp}: building mesh with model "
+                     f"axis {tp} over {n_devices} device(s) (engine "
+                     f"compute itself is not sharded yet)")
+        mesh_tp = tp
+    else:
+        if tp > 1:
+            lines.append(f"[serve] policy tp={tp}: only {n_devices} "
+                         f"device(s), running unsharded (tp=1)")
+        mesh_tp = 1
+    kwargs = {"max_batch": eng_batch, "decode_batch": dec_batch}
+    return mcfg, {**kwargs, "mesh_tp": mesh_tp}, lines
 
 
 def main() -> None:
@@ -31,10 +100,33 @@ def main() -> None:
     p.add_argument("--specdec", action="store_true",
                    help="speculative decoding demo (draft = thinner config)")
     p.add_argument("--k", type=int, default=5)
+    p.add_argument("--policy", default=None, metavar="DEPLOYMENT_JSON",
+                   help="mozart deployment artifact (or bare policy JSON) "
+                        "to apply: fusion flags, microbatches, TP")
+    p.add_argument("--policy-network", default=None,
+                   help="which network's policy to take from a "
+                        "multi-network artifact")
     args = p.parse_args()
 
     mcfg = configs.get_smoke_config(args.arch) if args.smoke \
         else configs.get_config(args.arch)
+
+    eng_kwargs = {"max_batch": args.max_batch}
+    if args.policy:
+        from repro.mozart import load_policy
+        pol = load_policy(args.policy, args.policy_network)
+        mcfg, kw, lines = apply_policy(pol, mcfg, args.max_batch)
+        for ln in lines:
+            print(ln)
+        mesh_tp = kw.pop("mesh_tp")
+        if mesh_tp > 1:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(model_axis=mesh_tp)
+            axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            print(f"[serve] mesh built: {axes} (available to "
+                  f"sharding-aware model paths; engine runs unsharded)")
+        eng_kwargs = kw
+
     params = api.init_params(mcfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
@@ -55,8 +147,7 @@ def main() -> None:
               f"tokens/iter={stats.tokens_per_iteration:.2f}")
         return
 
-    eng = ServingEngine(mcfg, params, max_batch=args.max_batch,
-                        max_len=args.max_len)
+    eng = ServingEngine(mcfg, params, max_len=args.max_len, **eng_kwargs)
     for i in range(args.requests):
         plen = int(rng.integers(4, 12))
         eng.submit(Request(

@@ -62,7 +62,18 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        # Mozart Insight 2: batch-agnostic stages (attention) may want a
+        # smaller lock-step decode batch than the slot count; when
+        # decode_batch < max_batch only that many active slots advance
+        # per step, round-robin (the others' cache indices are rolled
+        # back exactly like idle slots, so results are unchanged).
+        # NOTE: the decode itself is static-shaped over max_batch slots,
+        # so on this substrate sub-batching changes the *schedule* (more
+        # steps, fewer tokens each), not the per-step compute — it
+        # emulates the policy's batching semantics; compute savings need
+        # a compacted gather (ROADMAP).
         self.decode_batch = decode_batch or max_batch
+        self._rr = 0                  # round-robin cursor for sub-batching
         self.eos_id = eos_id
         self.cache = api.init_cache(mcfg, max_batch, max_len)
         # per-slot cache lengths (vector index -> mixed-length batching)
@@ -103,15 +114,23 @@ class ServingEngine:
     def step(self) -> int:
         """One lock-step decode over active slots; returns #active."""
         self._admit()
-        active = [b for b, r in enumerate(self.slots) if r is not None]
-        if not active:
+        all_active = [b for b, r in enumerate(self.slots) if r is not None]
+        if not all_active:
             return 0
+        if self.decode_batch < len(all_active):
+            start = self._rr % len(all_active)
+            active = (all_active + all_active)[start:
+                                              start + self.decode_batch]
+            self._rr += self.decode_batch
+        else:
+            active = all_active
         logits, new_cache = self._decode(
             self.params, jnp.asarray(self.next_token), self.cache)
         self.cache = new_cache
         self.stats["decode_steps"] += 1
-        self.stats["slot_occupancy"].append(len(active) / self.max_batch)
-        # inactive slots must not advance their cache index
+        self.stats["slot_occupancy"].append(
+            len(all_active) / self.max_batch)
+        # slots not advancing this step must not advance their cache index
         inactive = [b for b in range(self.max_batch) if b not in active]
         if inactive:
             idx = self.cache["index"]

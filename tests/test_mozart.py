@@ -1,0 +1,390 @@
+"""The unified deployment API: declarative specs, artifact round-trip,
+policy-driven serving."""
+
+import dataclasses
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro import mozart
+from repro.core import codesign, operators, scenarios
+from repro.core.fusion import GAConfig, Requirement
+from repro.core.policy import (
+    ExecutionPolicy,
+    OperatorPolicy,
+    policy_from_json,
+)
+from repro.core.pool import SAConfig
+
+TINY_SA = SAConfig(iterations=1, inner_ga=GAConfig(population=3, generations=1))
+TINY_GA = GAConfig(population=4, generations=2)
+
+
+def tiny_spec(**kw):
+    defaults = dict(
+        networks={
+            "resnet50": "resnet50",
+            "opt_dec": operators.lm_operator_graph(
+                operators.OPT_1_3B, 512, "decode", cache_len=512
+            ),
+        },
+        scenario="chatbot",
+        pool_size=4,
+        seq=512,
+        sa=TINY_SA,
+        ga=TINY_GA,
+        baselines=("best_homogeneous",),
+    )
+    defaults.update(kw)
+    return mozart.MozartSpec(**defaults)
+
+
+@pytest.fixture(scope="module")
+def deployment():
+    return mozart.compile(tiny_spec())
+
+
+# -- scenarios ----------------------------------------------------------------
+
+
+def test_scenario_registry():
+    assert set(mozart.SCENARIOS) == {
+        "chatbot",
+        "summarization",
+        "av_10ms",
+        "av_33ms",
+        "spec_decode",
+    }
+    assert mozart.get_scenario("chatbot").metric == "energy_cost"
+    with pytest.raises(KeyError, match="unknown scenario"):
+        mozart.get_scenario("nope")
+
+
+def test_spec_decode_scenario_roles():
+    s = mozart.get_scenario("spec_decode")
+    assert isinstance(s, scenarios.SpecDecodeScenario)
+    assert s.roles == ("draft", "target")
+    # the k draft steps + 1 verify pass split one iteration's budget
+    slot = s.accepted_per_iteration * s.requirement.tpot / (s.k + 1)
+    assert s.requirement_for("draft").max_e2e == pytest.approx(slot)
+    assert s.requirement_for("target").max_e2e == pytest.approx(slot)
+    assert s.requirement_for("") == s.requirement
+    with pytest.raises(ValueError, match="roles"):
+        s.requirement_for("verifier")
+    # iteration budget never exceeds the QoS: k drafts + verify <= TAR*tpot
+    total = s.k * slot + slot
+    assert total <= s.tar * s.requirement.tpot + 1e-12
+
+
+def test_scenario_serialization_roundtrip():
+    for s in mozart.SCENARIOS.values():
+        assert scenarios.Scenario.from_dict(s.to_dict()) == s
+
+
+# -- spec resolution ----------------------------------------------------------
+
+
+def test_spec_resolution_objective_and_reqs():
+    rs = tiny_spec().resolve()
+    assert rs.objective == "energy_cost"  # from the chatbot scenario
+    assert set(rs.networks) == {"resnet50", "opt_dec"}
+    assert rs.reqs["resnet50"] == scenarios.CHATBOT
+    assert tiny_spec(objective="edp").resolve().objective == "edp"
+    assert tiny_spec(scenario=None).resolve().objective == "energy"
+
+
+def test_spec_per_network_overrides():
+    spec = tiny_spec(
+        networks={
+            "a": mozart.NetworkSpec(workload="resnet50", scenario="av_10ms"),
+            "b": mozart.NetworkSpec(workload="resnet50", requirement=Requirement(e2e=1.0)),
+        },
+    )
+    rs = spec.resolve()
+    assert rs.reqs["a"] == scenarios.AV_FAST
+    assert rs.reqs["b"] == Requirement(e2e=1.0)
+
+
+def test_spec_specdec_roles_resolve():
+    spec = tiny_spec(
+        networks={
+            "draft": mozart.NetworkSpec(workload="opt66b_decode", role="draft"),
+            "tgt": mozart.NetworkSpec(workload="opt66b_prefill", role="target"),
+        },
+        scenario="spec_decode",
+    )
+    rs = spec.resolve()
+    s = mozart.get_scenario("spec_decode")
+    assert rs.reqs["draft"] == s.requirement_for("draft")
+    assert rs.reqs["tgt"] == s.requirement_for("target")
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="at least one network"):
+        tiny_spec(networks={}).resolve()
+    with pytest.raises(ValueError, match="unknown baselines"):
+        tiny_spec(baselines=("nope",)).resolve()
+    with pytest.raises(KeyError, match="unknown workload"):
+        tiny_spec(networks={"x": "not_a_workload"}).resolve()
+
+
+def test_spec_conflicting_metrics_need_explicit_objective():
+    edp_scen = scenarios.Scenario("custom", "edp", Requirement(e2e=1.0))
+    nets = {
+        "a": mozart.NetworkSpec(workload="resnet50", scenario="av_10ms"),
+        "b": mozart.NetworkSpec(workload="vit_b16", scenario=edp_scen),
+    }
+    with pytest.raises(ValueError, match="disagree on the metric"):
+        tiny_spec(networks=nets, scenario=None).resolve()
+    rs = tiny_spec(networks=nets, scenario=None, objective="edp").resolve()
+    assert rs.objective == "edp"
+
+
+def test_spec_serialization_roundtrip():
+    spec = tiny_spec()
+    spec2 = mozart.MozartSpec.from_dict(spec.to_dict())
+    assert spec2.resolve() == spec.resolve()
+    assert spec2.to_dict() == spec.to_dict()
+
+
+def test_spec_workers_fold_into_sa():
+    rs = tiny_spec(workers=3, executor="thread").resolve()
+    assert rs.sa.workers == 3
+    assert rs.sa.executor == "thread"
+    assert TINY_SA.workers is None  # caller's config untouched
+
+
+# -- compile + artifact round-trip -------------------------------------------
+
+
+def test_compile_produces_designs_and_policies(deployment):
+    dep = deployment
+    assert set(dep.designs) == {"resnet50", "opt_dec"}
+    assert set(dep.policies) == {"resnet50", "opt_dec"}
+    assert dep.objective == "energy_cost"
+    assert len(dep.pool) == 4
+    assert dep.best_homogeneous("resnet50") is not None
+    assert dep.unconstrained("resnet50") is None  # not requested
+    for d in dep.designs.values():
+        assert d.pnr.placements
+        assert d.fusion.value > 0
+
+
+def test_artifact_roundtrip_bit_exact(deployment, tmp_path):
+    dep = deployment
+    path = dep.save(tmp_path / "dep.json")
+    dep2 = mozart.load(path)
+    # bit-exact: metrics, pool labels, per-stage configs, P&R, summary
+    assert dep2.metrics() == dep.metrics()
+    assert dep2.pool_labels() == dep.pool_labels()
+    for name in dep.designs:
+        s1 = dep.designs[name].fusion.solution
+        s2 = dep2.designs[name].fusion.solution
+        assert [o.cfg.label for o in s1.stages] == [o.cfg.label for o in s2.stages]
+        assert [o.t_cmp for o in s1.stages] == [o.t_cmp for o in s2.stages]
+        assert dep2.designs[name].pnr.to_dict() == dep.designs[name].pnr.to_dict()
+    assert dep2.summary() == dep.summary()
+    # idempotent: a reloaded artifact re-serializes byte-identically
+    assert dep2.to_json() == dep.to_json()
+
+
+def test_artifact_schema_guard(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"schema": "other/v9"}))
+    with pytest.raises(ValueError, match="not a mozart deployment"):
+        mozart.load(p)
+
+
+def test_compile_raises_on_infeasible():
+    spec = tiny_spec(
+        networks={
+            "impossible": mozart.NetworkSpec(
+                workload="opt66b_prefill",
+                requirement=Requirement(e2e=1e-12),
+            ),
+        },
+        baselines=(),
+    )
+    with pytest.raises(RuntimeError, match="no feasible design"):
+        mozart.compile(spec)
+
+
+def test_summary_reductions(deployment):
+    summary = deployment.summary()
+    assert summary["objective"] == "energy_cost"
+    assert summary["geomean_value"] > 0
+    row = summary["per_network"]["resnet50"]
+    assert row["vs_best_homogeneous"] > 0
+    assert "vs_unconstrained" not in row
+    assert summary["chiplet_reuse"]
+
+
+# -- policy round-trip + consumption -----------------------------------------
+
+
+def test_policy_json_roundtrip(deployment):
+    pol = deployment.policy("opt_dec")
+    pol2 = policy_from_json(pol.to_json())
+    assert pol2 == pol
+    blob = json.loads(pol.to_json())
+    assert blob["fusion"] == pol.fusion_flags()
+
+
+def test_policy_json_flag_guard(deployment):
+    blob = json.loads(deployment.policy("opt_dec").to_json())
+    blob["fusion"]["flash_attention"] = not blob["fusion"]["flash_attention"]
+    with pytest.raises(ValueError, match="fusion flags"):
+        policy_from_json(json.dumps(blob))
+
+
+def test_load_policy_from_artifact_and_bare_file(deployment, tmp_path):
+    art = deployment.save(tmp_path / "dep.json")
+    pol = mozart.load_policy(art, "opt_dec")
+    assert pol == deployment.policy("opt_dec")
+    with pytest.raises(KeyError):
+        mozart.load_policy(art, "nope")
+    with pytest.raises(ValueError, match="name one"):
+        mozart.load_policy(art)  # two networks -> ambiguous
+    bare = tmp_path / "policy.json"
+    bare.write_text(pol.to_json())
+    assert mozart.load_policy(bare) == pol
+
+
+def fake_policy(groups):
+    ops = [
+        OperatorPolicy(
+            group=g,
+            batch=b,
+            tp=tp,
+            memory="HBM3",
+            chiplet="WS-pe64-glb512K-2D",
+            fused="+" in g,
+        )
+        for g, b, tp in groups
+    ]
+    return ExecutionPolicy(network="n", interval_s=1e-3, operators=ops)
+
+
+def test_apply_policy_mapping():
+    from repro.launch.serve import apply_policy
+    from repro.models.config import ModelConfig
+
+    pol = fake_policy(
+        [
+            ("norm1+qkv_proj+attention", 2, 2),
+            ("mlp", 16, 1),
+        ]
+    )
+    mcfg, kw, lines = apply_policy(pol, ModelConfig(), max_batch=8, n_devices=1)
+    assert mcfg.attn_impl == "flash"  # fusion flag applied
+    assert kw["max_batch"] == 8  # min(cli cap 8, sensitive 16)
+    assert kw["decode_batch"] == 2  # agnostic batch bounds decode
+    assert kw["mesh_tp"] == 1  # tp=2 but 1 device -> unsharded
+    text = "\n".join(lines)
+    assert "flash_attention=True" in text
+    assert "decode_batch=2" in text
+    _, kw2, _ = apply_policy(pol, ModelConfig(), max_batch=8, n_devices=2)
+    assert kw2["mesh_tp"] == 2
+
+
+def test_apply_policy_no_fusion():
+    from repro.launch.serve import apply_policy
+    from repro.models.config import ModelConfig
+
+    pol = fake_policy([("attention", 4, 1), ("mlp", 4, 1)])
+    mcfg, kw, _ = apply_policy(pol, ModelConfig(), max_batch=4, n_devices=1)
+    assert mcfg.attn_impl == "auto"  # unfused policy leaves dispatch alone
+    assert kw["max_batch"] == 4
+
+
+# -- satellite: baseline budget derivation -----------------------------------
+
+
+def test_best_homogeneous_uses_caller_budget(monkeypatch):
+    seen = []
+
+    def spy(graph, chiplet, objective="energy", req=None, ga=None):
+        seen.append(ga)
+        return None
+
+    monkeypatch.setattr(codesign, "homogeneous_design", spy)
+    g = operators.paper_workloads(seq=512)["resnet50"]
+    codesign.best_homogeneous_design(g, ga=TINY_GA)
+    assert all(ga == TINY_GA for ga in seen)
+    seen.clear()
+    codesign.best_homogeneous_design(g)
+    # no caller budget -> the full default, not a silently trimmed one
+    assert all(ga == GAConfig() for ga in seen)
+    assert GAConfig().generations == 24
+
+
+# -- serve --policy smoke (subprocess; slow) ---------------------------------
+
+
+@pytest.mark.slow
+def test_serve_policy_smoke(deployment, tmp_path):
+    art = deployment.save(tmp_path / "dep.json")
+    cmd = [
+        sys.executable,
+        "-m",
+        "repro.launch.serve",
+        "--arch",
+        "smollm-135m",
+        "--smoke",
+        "--policy",
+        str(art),
+        "--policy-network",
+        "opt_dec",
+        "--requests",
+        "2",
+        "--max-new",
+        "4",
+    ]
+    out = subprocess.run(cmd, capture_output=True, text=True, timeout=900, check=True).stdout
+    assert "policy network=opt1.3b_decode" in out
+    assert "fusion flags: flash_attention=True" in out
+    assert "policy microbatch" in out
+    assert "batch_sensitive_batch" in out
+
+
+@pytest.mark.slow
+def test_engine_decode_subbatching():
+    """decode_batch < max_batch round-robins lock-step decode without
+    changing any request's tokens."""
+    import jax
+    import numpy as np
+
+    from repro.models import api
+    from repro.models.config import ModelConfig
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = ModelConfig(
+        name="tiny",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=97,
+        dtype="float32",
+        param_dtype="float32",
+        scan_min_layers=2,
+    )
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [np.arange(4 + i, dtype=np.int32) + i for i in range(4)]
+
+    def run(decode_batch):
+        eng = ServingEngine(cfg, params, max_batch=4, max_len=64, decode_batch=decode_batch)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=6) for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [r.out_tokens for r in reqs], eng.stats["decode_steps"]
+
+    full, steps_full = run(4)
+    sub, steps_sub = run(2)
+    assert sub == full
+    assert steps_sub > steps_full  # sub-batching trades steps for width
