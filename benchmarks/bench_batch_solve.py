@@ -1,0 +1,168 @@
+"""Generation-eval throughput: fixed-seed wall-clock for evaluating one
+GA generation (option enumeration + Layer-3 solves), three ways:
+
+  * pr3    — the previous engine's per-genome path, reconstructed from
+    the retained object APIs: per-(group, SKU) StageOption tuples,
+    eagerly built StageOptionSet columns, a latency grid recomputed per
+    fusion plan, and one `solve_pipeline` call per plan;
+  * scalar — this engine's column caches but a per-genome
+    `evaluate_genome` loop (what MOZART_BATCH_SOLVE=0 runs);
+  * batched — `fusion.evaluate_genomes`: one prefetch + ONE
+    `convexhull.solve_pipeline_batch` call for the whole generation.
+
+All three must produce identical solutions (asserted).  The gate in
+benchmarks/compare.py holds `speedup_vs_pr3` (batched vs pr3) above the
+baseline threshold.  Run as a module
+(`PYTHONPATH=src python -m benchmarks.bench_batch_solve`) or via
+benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core import costmodel, engine, operators
+from repro.core.chiplets import default_pool
+from repro.core.convexhull import default_latency_grid, solve_pipeline
+from repro.core.fusion import (
+    GAConfig,
+    Requirement,
+    _mutate,
+    evaluate_genome,
+    evaluate_genomes,
+    groups_from_genome,
+    initial_population,
+)
+from repro.core.perfmodel import StageOptionSet, enumerate_stage_options_by_chiplet
+
+from .common import FAST, write_bench_json
+
+N_GENOMES = 12 if FAST else 24
+REPEATS = 3 if FAST else 5
+
+
+def _generation():
+    graph = operators.paper_workloads(seq=512)["resnet50"]
+    pool = default_pool()[:4]
+    cfg = GAConfig(population=10, generations=10)
+    rng = random.Random(0)
+    base = initial_population(graph, pool, cfg)
+    genomes = list(base)
+    while len(genomes) < N_GENOMES:
+        genomes.append(_mutate(rng.choice(base), rng, 0.2))
+    return graph, pool, cfg, genomes
+
+
+def _pr3_generation(graph, pool, cfg, genomes, req):
+    """The PR-3 engine's generation evaluation, op for op: object-tuple
+    option cache, eager column build, per-plan grid, per-plan solve."""
+    cache: dict[tuple, tuple] = {}
+    batches = tuple(cfg.batches)
+    sols: dict[tuple, object] = {}
+    for genome in genomes:
+        groups = groups_from_genome(graph, genome)
+        key = tuple(groups)
+        if key in sols:
+            continue
+        options = []
+        for gr in groups:
+            opts: list = []
+            for c in pool:
+                k = (gr.ops, gr.repeat, c, gr.memory, cfg.fixed_batch, batches, gr.name)
+                got = cache.get(k)
+                if got is None:
+                    got = enumerate_stage_options_by_chiplet(
+                        gr.ops,
+                        (c,),
+                        memories=(gr.memory,),
+                        batches=batches,
+                        name=gr.name,
+                        fixed_batch=cfg.fixed_batch,
+                        cost_fn=costmodel.stage_hw_cost,
+                        repeat=gr.repeat,
+                    )[c]
+                    cache[k] = got
+                opts.extend(got)
+            s = StageOptionSet(opts)
+            s.columns()
+            options.append(s)
+        if any(not o for o in options):
+            sols[key] = None
+            continue
+        grid = default_latency_grid(options, n=cfg.latency_points)
+        n_stages = sum(x.repeat for x in groups)
+        sols[key] = solve_pipeline(
+            options, grid, objective="energy", max_e2e=req.max_e2e, n_stages=n_stages
+        )
+    return {g: sols[tuple(groups_from_genome(graph, g))] for g in genomes}
+
+
+def _scalar_generation(graph, pool, cfg, genomes, req):
+    sc: dict = {}
+    out = {
+        g: evaluate_genome(graph, g, pool, "energy", req, cfg, _solution_cache=sc)
+        for g in genomes
+    }
+    return {g: None if r is None else r.solution for g, r in out.items()}
+
+
+def _batched_generation(graph, pool, cfg, genomes, req):
+    out = evaluate_genomes(graph, genomes, pool, "energy", req, cfg, {})
+    return {g: None if r is None else r.solution for g, r in out.items()}
+
+
+def _time_arm(fn, args):
+    best = float("inf")
+    out = None
+    for _ in range(REPEATS):
+        engine.clear_all_caches()
+        t0 = time.perf_counter()
+        out = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
+
+
+def run():
+    graph, pool, cfg, genomes = _generation()
+    req = Requirement()
+    args = (graph, pool, cfg, genomes, req)
+    us_pr3, sols_pr3 = _time_arm(_pr3_generation, args)
+    us_scalar, sols_scalar = _time_arm(_scalar_generation, args)
+    us_batched, sols_batched = _time_arm(_batched_generation, args)
+    engine.clear_all_caches()
+
+    def fingerprint(sols):
+        return {
+            g: None if s is None else (s.value, s.T, tuple(o.cfg.label for o in s.stages))
+            for g, s in sols.items()
+        }
+
+    if not (fingerprint(sols_pr3) == fingerprint(sols_scalar) == fingerprint(sols_batched)):
+        raise AssertionError("generation evaluation paths disagree on solutions")
+
+    vs_pr3 = us_pr3 / max(us_batched, 1.0)
+    vs_scalar = us_scalar / max(us_batched, 1.0)
+    write_bench_json(
+        "batch_solve",
+        {
+            "pr3_us": round(us_pr3, 1),
+            "scalar_us": round(us_scalar, 1),
+            "batched_us": round(us_batched, 1),
+            "speedup_vs_pr3": round(vs_pr3, 3),
+            "speedup_vs_scalar": round(vs_scalar, 3),
+            "identical_solutions": True,  # asserted above
+            "n_genomes": len(genomes),
+            "repeats": REPEATS,
+        },
+    )
+    return [
+        ("batch_solve.pr3_generation_eval", us_pr3, f"n_genomes={len(genomes)}"),
+        ("batch_solve.scalar_loop", us_scalar, f"{vs_scalar:.2f}x_slower_than_batched"),
+        ("batch_solve.batched", us_batched, f"{vs_pr3:.2f}x_vs_pr3 identical_solutions=True"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -11,7 +11,11 @@ nonzero on any regression:
     runners), and the engine must still return the identical best design;
   * budget_scaling — both fixed-seed budget axes must remain
     monotone-or-flat, i.e. more search budget never yields a worse
-    objective.
+    objective;
+  * batch_solve — the generation-batched Layer-3 evaluation must stay
+    >= min_speedup_vs_pr3 over the reconstructed PR-3 per-genome path
+    (the dev container measures 2.4-2.9x; the threshold is loose for
+    noisy CI runners) and keep producing identical solutions.
 
 Usage: PYTHONPATH=src python -m benchmarks.compare [--dir DIR]
        [--baseline benchmarks/baselines.json]
@@ -72,6 +76,26 @@ def check(bench_dir: str, baselines: dict) -> list[str]:
             n_ga = len(blob.get("ga_levels", []))
             print(f"OK budget_scaling: monotone over {n_sa} SA + "
                   f"{n_ga} GA budget levels")
+
+    path = os.path.join(bench_dir, "BENCH_batch_solve.json")
+    blob = _load(path)
+    base = baselines.get("batch_solve", {})
+    if blob is None:
+        failures.append(f"missing artifact: {path}")
+    else:
+        min_speedup = float(base.get("min_speedup_vs_pr3", 1.0))
+        speedup = float(blob.get("speedup_vs_pr3", 0.0))
+        if speedup < min_speedup:
+            failures.append(
+                f"batch_solve generation-eval speedup regressed: "
+                f"{speedup:.2f}x < baseline {min_speedup:.2f}x")
+        else:
+            print(f"OK batch_solve: generation-eval {speedup:.2f}x >= "
+                  f"{min_speedup:.2f}x vs the PR-3 per-genome path")
+        if not blob.get("identical_solutions", False):
+            failures.append(
+                "batch_solve: batched generation evaluation no longer "
+                "produces identical solutions")
     return failures
 
 

@@ -21,6 +21,7 @@ MODULES = [
     "roofline",              # §Roofline (from dry-run artifacts)
     "bench_codesign_search",  # engine speedup: cached/vectorized vs seed
     "bench_budget_scaling",  # search quality vs budget (monotone axes)
+    "bench_batch_solve",     # generation-batched Layer-3 vs per-genome
 ]
 
 

@@ -20,7 +20,12 @@ Default search budgets are the raised, benchmark-justified ones
 benchmarks/bench_budget_scaling.py), not the paper's Table 4 toy
 settings; pass explicit configs to reproduce the paper budgets.  The
 per-network evaluation fan-out is controlled by `SAConfig.workers` /
-`SAConfig.executor` (or MOZART_WORKERS / MOZART_EXECUTOR).
+`SAConfig.executor` (or MOZART_WORKERS / MOZART_EXECUTOR); with the
+process executor, `SAConfig.warmup` (MOZART_WARMUP, default on) shares
+the per-SKU option cache across workers via a pre-fork shared-memory
+warmup.  Layer-3 runs generation-batched through
+`convexhull.solve_pipeline_batch` (MOZART_BATCH_SOLVE=0 restores the
+per-genome loop); every knob is bit-identical for a fixed seed.
 """
 from __future__ import annotations
 

@@ -29,7 +29,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from .engine import engine_enabled
+from .engine import batch_solve_enabled, engine_enabled
 from .perfmodel import StageOption, StageOptionSet, envelope_keep_mask
 
 
@@ -369,20 +369,11 @@ def _option_columns(opts: Sequence[StageOption]
 HULLVEC_MIN_CELLS = 2_000_000
 
 
-def _solve_pipeline_numpy(stage_options: Sequence[Sequence[StageOption]],
-                          lat: list[float], objective: str,
-                          P: int,
-                          force_sweep: bool = False
-                          ) -> PipelineSolution | None:
-    """Vectorized iso-latency sweep.  Per stage, envelope values over the
-    grid come from either a masked (options x latencies) dense array min
-    or, above HULLVEC_MIN_CELLS (or with engine="hullvec"), the
-    O((M+Q) log M) prefix-block hull sweep.  Values match the hull engine
-    (same slope/intercept formulation) to the last bit; ties between
-    exactly-equal options may pick a different argmin."""
-    latv = np.asarray(lat, dtype=np.float64)
-    weighted = objective.endswith("_cost")
-    cols = []
+def _stage_cols(stage_options: Sequence[Sequence[StageOption]],
+                weighted: bool) -> list[tuple] | None:
+    """Per-stage pruned (t_cmp, slope, intercept, original_index) columns,
+    or None when any stage has no options (infeasible pipeline)."""
+    cols: list[tuple] = []
     for opts in stage_options:
         if isinstance(opts, StageOptionSet):
             if len(opts) == 0:
@@ -396,6 +387,51 @@ def _solve_pipeline_numpy(stage_options: Sequence[Sequence[StageOption]],
         slope, icept = p_static * w, e_dyn * w
         idx = np.flatnonzero(envelope_keep_mask(t_cmp, slope, icept))
         cols.append((t_cmp[idx], slope[idx], icept[idx], idx))
+    return cols
+
+
+def _build_solution(stage_options: Sequence[Sequence[StageOption]],
+                    cols: list[tuple], lat: list[float],
+                    total: np.ndarray, objective: str,
+                    P: int) -> PipelineSolution | None:
+    """argmin over the summed grid + second pass recovering each stage's
+    winner at the winning T only.  Exact-tie break mirrors the hull
+    engine: duplicate lines keep the first inserted, and insertion order
+    is ascending t_cmp (stable)."""
+    best_i = int(np.argmin(total))
+    if not math.isfinite(total[best_i]):
+        return None
+    best_T = lat[best_i]
+    best_stages = []
+    for opts, (t_cmp, slope, icept, idx) in zip(stage_options, cols):
+        v = slope * best_T + icept
+        v[t_cmp > best_T] = math.inf
+        cand = np.flatnonzero(v == v.min())
+        best_stages.append(opts[int(idx[cand[np.argmin(t_cmp[cand])]])])
+    e = sum(o.e_dyn + o.p_static * best_T for o in best_stages)
+    cost = sum(o.hw_cost_usd for o in best_stages)
+    return PipelineSolution(objective=objective, value=float(total[best_i]),
+                            T=best_T, energy_per_sample=e,
+                            delay_e2e=best_T * P, hw_cost_usd=cost,
+                            throughput=1.0 / best_T, stages=best_stages)
+
+
+def _solve_pipeline_numpy(stage_options: Sequence[Sequence[StageOption]],
+                          lat: list[float], objective: str,
+                          P: int,
+                          force_sweep: bool = False
+                          ) -> PipelineSolution | None:
+    """Vectorized iso-latency sweep.  Per stage, envelope values over the
+    grid come from either a masked (options x latencies) dense array min
+    or, above HULLVEC_MIN_CELLS (or with engine="hullvec"), the
+    O((M+Q) log M) prefix-block hull sweep.  Values match the hull engine
+    (same slope/intercept formulation) to the last bit; ties between
+    exactly-equal options may pick a different argmin."""
+    latv = np.asarray(lat, dtype=np.float64)
+    weighted = objective.endswith("_cost")
+    cols = _stage_cols(stage_options, weighted)
+    if cols is None:
+        return None
     mins_rows: list[np.ndarray | None] = [None] * len(cols)
     dense = [i for i, c in enumerate(cols)
              if not force_sweep and c[0].size * latv.size < HULLVEC_MIN_CELLS]
@@ -420,25 +456,7 @@ def _solve_pipeline_numpy(stage_options: Sequence[Sequence[StageOption]],
         total += row
     if objective in ("edp", "edp_cost"):
         total = total * (latv * P)
-    best_i = int(np.argmin(total))
-    if not math.isfinite(total[best_i]):
-        return None
-    best_T = lat[best_i]
-    # Second pass: recover each stage's argmin at the winning T only.
-    # Exact-tie break mirrors the hull engine: duplicate lines keep the
-    # first inserted, and insertion order is ascending t_cmp (stable).
-    best_stages = []
-    for opts, (t_cmp, slope, icept, idx) in zip(stage_options, cols):
-        v = slope * best_T + icept
-        v[t_cmp > best_T] = math.inf
-        cand = np.flatnonzero(v == v.min())
-        best_stages.append(opts[int(idx[cand[np.argmin(t_cmp[cand])]])])
-    e = sum(o.e_dyn + o.p_static * best_T for o in best_stages)
-    cost = sum(o.hw_cost_usd for o in best_stages)
-    return PipelineSolution(objective=objective, value=float(total[best_i]),
-                            T=best_T, energy_per_sample=e,
-                            delay_e2e=best_T * P, hw_cost_usd=cost,
-                            throughput=1.0 / best_T, stages=best_stages)
+    return _build_solution(stage_options, cols, lat, total, objective, P)
 
 
 def solve_pipeline(stage_options: Sequence[Sequence[StageOption]],
@@ -506,6 +524,219 @@ def solve_pipeline(stage_options: Sequence[Sequence[StageOption]],
                             stages=best_stages)
 
 
+@dataclasses.dataclass
+class PipelineJob:
+    """One genome's Layer-3 solve, as an element of a generation batch:
+    the per-stage option sets, the latency grid, and the constraints that
+    `solve_pipeline` would receive for that genome."""
+    stage_options: Sequence[Sequence[StageOption]]
+    latencies: Sequence[float]
+    max_interval: float | None = None
+    max_e2e: float | None = None
+    n_stages: int | None = None
+
+
+# Upper bound on dense cells materialized by one flat generation sweep;
+# batches beyond it are processed in chunks (bounds peak memory at
+# ~3 full-size float64 temporaries).
+BATCH_MAX_CELLS = 8_000_000
+
+
+def _batch_dense_rows(blocks: list[tuple[int, int]], prepared: list,
+                      out_rows: dict[tuple[int, int], np.ndarray]) -> None:
+    """Evaluate every dense (job, stage) block of a generation in ONE
+    segmented sweep.
+
+    Jobs have ragged grids, so the per-job grids are packed into a
+    (jobs x max_grid) matrix (padded columns are never read back) and
+    every option row gathers its job's grid row: one multiply, one add,
+    one mask over the stacked (all options x max_grid) matrix, then a
+    single `np.minimum.reduceat` with one segment per (job, stage)
+    block.  Each cell computes slope*T then +intercept — the exact op
+    sequence of the per-genome dense sweep — so the resulting rows are
+    bit-identical to per-genome `_solve_pipeline_numpy` calls.
+    """
+    M = np.array([prepared[pi][3][si][0].size for pi, si in blocks],
+                 dtype=np.int64)
+    t_all = np.concatenate([prepared[pi][3][si][0] for pi, si in blocks])
+    s_all = np.concatenate([prepared[pi][3][si][1] for pi, si in blocks])
+    c_all = np.concatenate([prepared[pi][3][si][2] for pi, si in blocks])
+    job_ids = sorted({pi for pi, _ in blocks})
+    job_row = {pi: r for r, pi in enumerate(job_ids)}
+    max_q = max(prepared[pi][0].size for pi in job_ids)
+    # Padded per-job grid matrix; the pad value only fills cells that are
+    # sliced away below, so its value is irrelevant (0 keeps it finite).
+    lat_pad = np.zeros((len(job_ids), max_q))
+    for pi in job_ids:
+        lat_pad[job_row[pi], :prepared[pi][0].size] = prepared[pi][0]
+    row_of_option = np.repeat(
+        np.array([job_row[pi] for pi, _ in blocks], dtype=np.intp), M)
+    T = lat_pad[row_of_option]            # (total options x max_q)
+    vals = s_all[:, None] * T
+    vals += c_all[:, None]
+    vals[t_all[:, None] > T] = math.inf
+    starts = np.concatenate(([0], np.cumsum(M)))[:-1]
+    mins = np.minimum.reduceat(vals, starts, axis=0)
+    for b, (pi, si) in enumerate(blocks):
+        out_rows[(pi, si)] = mins[b, :prepared[pi][0].size]
+
+
+def _batch_recover(blocks: list[tuple[int, int]], prepared: list,
+                   best_T: dict[int, float]) -> dict[tuple[int, int], int]:
+    """Batched second pass: for every (job, stage) block, the index (into
+    the block's pruned columns) of the winning option at the job's
+    winning T — one flat segmented computation replacing the per-job
+    Python recovery loop.
+
+    The tie-break is the hull engine's, replicated exactly: among
+    options attaining the envelope minimum (exact float equality), the
+    smallest t_cmp wins, and among equal t_cmp the lowest index (first
+    inserted) wins."""
+    M = np.array([prepared[pi][3][si][0].size for pi, si in blocks],
+                 dtype=np.int64)
+    starts = np.concatenate(([0], np.cumsum(M)))[:-1]
+    t_all = np.concatenate([prepared[pi][3][si][0] for pi, si in blocks])
+    s_all = np.concatenate([prepared[pi][3][si][1] for pi, si in blocks])
+    c_all = np.concatenate([prepared[pi][3][si][2] for pi, si in blocks])
+    Tb = np.repeat(np.array([best_T[pi] for pi, _ in blocks]), M)
+    v = s_all * Tb
+    v += c_all
+    v[t_all > Tb] = math.inf
+    vmin = np.minimum.reduceat(v, starts)
+    elig = v == np.repeat(vmin, M)
+    tkey = np.where(elig, t_all, math.inf)
+    tmin = np.minimum.reduceat(tkey, starts)
+    good = elig & (t_all == np.repeat(tmin, M))
+    loc = np.arange(t_all.size, dtype=np.int64) - np.repeat(starts, M)
+    win = np.minimum.reduceat(np.where(good, loc, t_all.size), starts)
+    return {blk: int(w) for blk, w in zip(blocks, win)}
+
+
+def solve_pipeline_batch(jobs: Sequence[PipelineJob],
+                         objective: str = "energy",
+                         engine: str = "auto"
+                         ) -> list[PipelineSolution | None]:
+    """Generation-batched `solve_pipeline`: every job's per-stage
+    envelope columns are stacked into one ragged flat array set and the
+    iso-latency grids of the whole batch are swept together with
+    segmented `minimum.reduceat` reductions; per-job winning stages are
+    recovered in a single second pass at each job's winning T.
+
+    Returns one `PipelineSolution | None` per job, aligned with `jobs`,
+    bit-identical (values, T, stage configs, tie-breaks) to calling
+    `solve_pipeline` per job.  Stages whose (options x latencies) cell
+    count crosses HULLVEC_MIN_CELLS still use the O((M+Q) log M) hull
+    sweep, exactly as the per-genome path would.  `MOZART_BATCH_SOLVE=0`
+    (or a non-numpy engine) falls back to the scalar per-job loop.
+    """
+    assert objective in ("energy", "edp", "energy_cost", "edp_cost")
+    per_genome = False
+    if engine == "auto":
+        if not engine_enabled():
+            engine = "hull"
+        elif not batch_solve_enabled():
+            engine = "numpy"          # per-genome loop, vectorized path
+            per_genome = True
+        else:
+            engine = "numpy"
+    if per_genome or engine not in ("numpy", "hullvec"):
+        return [solve_pipeline(j.stage_options, j.latencies,
+                               objective=objective,
+                               max_interval=j.max_interval,
+                               max_e2e=j.max_e2e, n_stages=j.n_stages,
+                               engine=engine) for j in jobs]
+    force_sweep = engine == "hullvec"
+    weighted = objective.endswith("_cost")
+
+    # Per-job preprocessing, mirroring solve_pipeline exactly:
+    # (latv, lat list, P, cols) or None for infeasible jobs.
+    prepared: list[tuple | None] = []
+    for j in jobs:
+        P = j.n_stages if j.n_stages is not None else len(j.stage_options)
+        lat = sorted(set(j.latencies))
+        if j.max_interval is not None:
+            lat = [t for t in lat if t <= j.max_interval]
+        if j.max_e2e is not None:
+            lat = [t for t in lat if t * P <= j.max_e2e]
+        if not lat or P == 0:
+            prepared.append(None)
+            continue
+        cols = _stage_cols(j.stage_options, weighted)
+        if cols is None:
+            prepared.append(None)
+            continue
+        prepared.append((np.asarray(lat, dtype=np.float64), lat, P, cols))
+
+    # Plan: dense blocks go to the flat batched sweep (chunked to bound
+    # memory — the chunk's footprint is (sum of option counts) x (max
+    # grid length), since shorter grids are padded up to the longest in
+    # the chunk); oversized stages use the per-stage hull sweep.
+    rows: dict[tuple[int, int], np.ndarray] = {}
+    chunk: list[tuple[int, int]] = []
+    chunk_m = 0
+    chunk_q = 0
+    for pi, prep in enumerate(prepared):
+        if prep is None:
+            continue
+        latv, _, _, cols = prep
+        for si, c in enumerate(cols):
+            m, q = c[0].size, latv.size
+            if force_sweep or m * q >= HULLVEC_MIN_CELLS:
+                rows[(pi, si)] = stage_envelope_sweep(c[0], c[1], c[2],
+                                                      latv)
+                continue
+            if chunk and (chunk_m + m) * max(chunk_q, q) > BATCH_MAX_CELLS:
+                _batch_dense_rows(chunk, prepared, rows)
+                chunk, chunk_m, chunk_q = [], 0, 0
+            chunk.append((pi, si))
+            chunk_m += m
+            chunk_q = max(chunk_q, q)
+    if chunk:
+        _batch_dense_rows(chunk, prepared, rows)
+
+    # Per-job totals and winning T (cheap vector ops per job); the
+    # per-stage winner recovery across all jobs is batched below.
+    totals: dict[int, np.ndarray] = {}
+    best_i: dict[int, int] = {}
+    best_T: dict[int, float] = {}
+    for pi, prep in enumerate(prepared):
+        if prep is None:
+            continue
+        latv, lat, P, cols = prep
+        total = np.zeros(len(lat))
+        for si in range(len(cols)):       # per-stage add order preserved
+            total += rows[(pi, si)]
+        if objective in ("edp", "edp_cost"):
+            total = total * (latv * P)
+        i = int(np.argmin(total))
+        if not math.isfinite(total[i]):
+            continue
+        totals[pi] = total
+        best_i[pi] = i
+        best_T[pi] = lat[i]
+
+    rec = [(pi, si) for pi in best_T
+           for si in range(len(prepared[pi][3]))]
+    winners = _batch_recover(rec, prepared, best_T) if rec else {}
+
+    out: list[PipelineSolution | None] = []
+    for pi, (j, prep) in enumerate(zip(jobs, prepared)):
+        if prep is None or pi not in best_T:
+            out.append(None)
+            continue
+        _, lat, P, cols = prep
+        T = best_T[pi]
+        stages = [j.stage_options[si][int(cols[si][3][winners[(pi, si)]])]
+                  for si in range(len(cols))]
+        e = sum(o.e_dyn + o.p_static * T for o in stages)
+        cost = sum(o.hw_cost_usd for o in stages)
+        out.append(PipelineSolution(
+            objective=objective, value=float(totals[pi][best_i[pi]]),
+            T=T, energy_per_sample=e, delay_e2e=T * P, hw_cost_usd=cost,
+            throughput=1.0 / T, stages=stages))
+    return out
+
+
 def solve_pipeline_bruteforce(stage_options, latencies, objective="energy",
                               max_interval=None, max_e2e=None,
                               n_stages=None):
@@ -546,11 +777,32 @@ def solve_pipeline_bruteforce(stage_options, latencies, objective="energy",
     return best
 
 
+# Latency grids memoized per (n, option-set uids): the grid depends only
+# on the option sets, and distinct genomes routinely decode to the same
+# cached StageOptionSets, so batched and scalar genome evaluations share
+# one grid computation per distinct fusion plan.  Keyed by the sets'
+# process-unique uid tokens (never reused, unlike id()), FIFO-bounded.
+_GRID_CACHE: dict[tuple, list[float]] = {}
+_GRID_CACHE_MAX = 65536
+
+
+def clear_grid_cache() -> None:
+    _GRID_CACHE.clear()
+
+
 def default_latency_grid(stage_options: Sequence[Sequence[StageOption]],
                          n: int = 64) -> list[float]:
     """Geometric grid spanning [min feasible T, max useful T].  Includes
     every stage's t_cmp values (the only points where envelopes change
-    shape matter beyond grid resolution)."""
+    shape matter beyond grid resolution).  Memoized per option-set key
+    when every stage is a StageOptionSet."""
+    key = None
+    if stage_options and all(isinstance(o, StageOptionSet)
+                             for o in stage_options):
+        key = (n, *(o.uid for o in stage_options))
+        hit = _GRID_CACHE.get(key)
+        if hit is not None:
+            return list(hit)
     per_stage = [_option_columns(opts)[0] for opts in stage_options]
     tc = np.concatenate(per_stage) if per_stage else np.empty(0)
     lo, hi = float(tc.min()), float(tc.max())
@@ -559,4 +811,10 @@ def default_latency_grid(stage_options: Sequence[Sequence[StageOption]],
     # All bottleneck candidates: the max over stages of per-stage t_cmp's.
     grid.update(float(c.min()) for c in per_stage)
     grid.update(tc[:256].tolist())
-    return sorted(grid)
+    out = sorted(grid)
+    if key is not None:
+        if len(_GRID_CACHE) >= _GRID_CACHE_MAX:
+            _GRID_CACHE.pop(next(iter(_GRID_CACHE)))
+        _GRID_CACHE[key] = out
+        return list(out)
+    return out

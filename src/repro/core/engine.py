@@ -5,15 +5,22 @@ result-preserving for a fixed seed:
 
   * vectorization — `perfmodel.enumerate_stage_options` evaluates the
     whole (chiplet x memory x mem_units x tp x batch) grid of a fusion
-    group with batched NumPy instead of per-option scalar math, and
-    `convexhull.solve_pipeline` sweeps the iso-latency grid as a dense
-    (options x latencies) array min instead of a Python hull walk;
+    group with batched NumPy instead of per-option scalar math (the
+    engine path keeps the results as column blocks — StageOption
+    objects materialize lazily), `convexhull.solve_pipeline` sweeps the
+    iso-latency grid as a dense (options x latencies) array min instead
+    of a Python hull walk, and a whole GA generation's Layer-3 solves
+    collapse into ONE `convexhull.solve_pipeline_batch` call
+    (`fusion.evaluate_genomes`; MOZART_BATCH_SOLVE=0 restores the
+    per-genome loop);
   * memoization — Layer-2 GA results are cached per
     (pool fingerprint, network, objective, requirement, GA budget), so
     SA iterations that revisit a pool (rejected moves, identity
-    mutations, the final full-budget re-eval) skip the GA entirely, and
+    mutations, the final full-budget re-eval) skip the GA entirely;
     stage options are additionally cached per *single chiplet* so a
-    one-SKU neighbor move only enumerates options for the new SKU;
+    one-SKU neighbor move only enumerates options for the new SKU; and
+    config grids, per-block dominance masks, and default latency grids
+    are memoized across groups/genomes/pools;
   * parallelism — `evaluate_pool`'s per-network loop can fan out over a
     thread pool or, since the GA inner loop is GIL-bound Python, a
     spawn-safe process pool (`workers` / MOZART_WORKERS for the width,
@@ -21,7 +28,13 @@ result-preserving for a fixed seed:
     workers are persistent and keep their own cache shard (engine memo +
     fusion option caches live for the worker's lifetime); results are
     merged back into the parent engine's memo, and any failure to spawn
-    falls back to the thread path.
+    falls back to the thread path.  A pre-fork warmup (`warmup` /
+    MOZART_WARMUP, on by default) ships the parent's per-SKU option
+    columns to workers over multiprocessing shared memory (pickle
+    fallback) and merges worker-discovered columns back each round, so
+    no (group, SKU) option block is enumerated twice anywhere in the
+    pool — `EvaluationEngine.stats()` reports the warmup_hits /
+    worker_enumerations traffic.
 
 `MOZART_DISABLE_ENGINE=1` (or `set_engine_enabled(False)`) restores the
 seed's scalar, uncached behavior — used by
@@ -56,6 +69,18 @@ def set_engine_enabled(flag: bool) -> None:
     _enabled = bool(flag)
 
 
+def batch_solve_enabled() -> bool:
+    """MOZART_BATCH_SOLVE=0 disables the generation-batched Layer-3
+    solve (convexhull.solve_pipeline_batch falls back to a per-genome
+    loop) — an escape hatch for debugging; results are bit-identical
+    either way."""
+    return os.environ.get("MOZART_BATCH_SOLVE", "1") != "0"
+
+
+def _default_warmup() -> bool:
+    return os.environ.get("MOZART_WARMUP", "1") != "0"
+
+
 def _default_workers() -> int:
     try:
         return int(os.environ.get("MOZART_WORKERS", "0") or 0)
@@ -71,19 +96,96 @@ def _default_executor() -> str:
     return kind if kind in EXECUTOR_KINDS else "thread"
 
 
+class _WarmupShipment:
+    """Parent-side handle for one round's shared option-cache shipment:
+    the packed column matrix (in a SharedMemory block when available,
+    inline otherwise) plus the metadata that lets workers rebuild
+    bit-identical StageOptionColumns without re-running the perf model."""
+
+    def __init__(self, payload: tuple, shm=None):
+        self.payload = payload
+        self._shm = shm
+
+    def close(self) -> None:
+        if self._shm is not None:
+            try:
+                self._shm.close()
+                self._shm.unlink()
+            except Exception:
+                pass
+            self._shm = None
+
+
+def _attach_shm(name: str):
+    """Attach to an existing SharedMemory block; the parent owns the
+    block's lifetime.  On 3.13+ `track=False` skips resource-tracker
+    registration entirely.  On <=3.12 attaching registers with the
+    resource tracker, but pool workers share the PARENT's tracker
+    process and its cache is a set — the re-registration of an
+    already-tracked name is a no-op, and the parent's single unlink
+    unregisters it exactly once (a worker-side unregister here would
+    race other workers and KeyError inside the tracker)."""
+    from multiprocessing import shared_memory
+    try:
+        return shared_memory.SharedMemory(name=name, track=False)
+    except TypeError:                      # track= is 3.13+
+        return shared_memory.SharedMemory(name=name)
+
+
+def _install_warmup(payload: tuple) -> int:
+    """Worker-side: unpack a warmup shipment into the fusion option
+    cache.  Returns the number of (group, SKU) blocks installed (keys
+    already present — e.g. on a persistent worker's later rounds — are
+    skipped)."""
+    import numpy as np
+
+    from . import fusion
+    kind = payload[0]
+    if kind == "pickle":
+        _, matrix, meta = payload
+        return fusion.import_option_columns(meta, matrix)
+    _, name, shape, dtype, meta = payload
+    shm = _attach_shm(name)
+    try:
+        matrix = np.ndarray(shape, dtype=np.dtype(dtype), buffer=shm.buf)
+        return fusion.import_option_columns(meta, matrix)
+    finally:
+        shm.close()
+
+
 def _process_worker(enabled: bool, pool: tuple, graph: "OperatorGraph",
                     objective: str, req: "Requirement",
-                    ga: "GAConfig") -> "FusionResult | None":
+                    ga: "GAConfig", warmup: tuple | None = None
+                    ) -> tuple:
     """Entry point run inside a spawned worker process.
 
     Evaluates one (pool, network) GA through the worker's own
     DEFAULT_ENGINE, so each worker accumulates an independent cache shard
     (engine memo + fusion option caches) that persists across tasks for
     the life of the worker.  `enabled` carries the parent's engine switch
-    across the spawn boundary."""
+    across the spawn boundary.
+
+    A warmup shipment, when given, is installed into the worker's option
+    cache first (so the worker never re-enumerates options any process
+    already evaluated), and the options the worker DOES enumerate during
+    the task are shipped back for the parent to merge and rebroadcast.
+    Returns (result, {installed, enumerated}, (meta, matrix))."""
+    from . import fusion
     set_engine_enabled(enabled)
-    return DEFAULT_ENGINE.evaluate_network(list(pool), graph, objective,
-                                           req, ga)
+    installed = 0
+    if warmup is not None:
+        try:
+            installed = _install_warmup(warmup)
+        except Exception:
+            installed = 0
+    known = set(fusion._chiplet_option_cache)
+    before = fusion.warmup_stats()["enumerated"]
+    res = DEFAULT_ENGINE.evaluate_network(list(pool), graph, objective,
+                                          req, ga)
+    enumerated = fusion.warmup_stats()["enumerated"] - before
+    new_keys = [k for k in fusion._chiplet_option_cache if k not in known]
+    ship = fusion.export_option_columns(new_keys)
+    return res, {"installed": installed, "enumerated": enumerated}, ship
 
 
 class EvaluationEngine:
@@ -96,15 +198,30 @@ class EvaluationEngine:
     """
 
     def __init__(self, workers: int | None = None,
-                 executor: str | None = None):
+                 executor: str | None = None,
+                 warmup: bool | None = None):
         self.workers = _default_workers() if workers is None else workers
         self.executor = _default_executor() if executor is None else executor
+        self.warmup = _default_warmup() if warmup is None else warmup
         self._cache: dict[tuple, "FusionResult | None"] = {}
         self._lock = threading.Lock()
         self._procpool: ProcessPoolExecutor | None = None
         self._procpool_size = 0
+        # Option-cache keys already shipped to the CURRENT worker pool
+        # (workers are persistent, so each block needs shipping once;
+        # reset whenever the pool is recreated).
+        self._shipped_keys: set[tuple] = set()
         self.hits = 0
         self.misses = 0
+        # Shared-option-cache traffic over the process pool: blocks the
+        # workers received prewarmed vs. blocks they had to enumerate.
+        self.warmup_hits = 0
+        self.worker_enumerations = 0
+
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "warmup_hits": self.warmup_hits,
+                "worker_enumerations": self.worker_enumerations}
 
     # -- cache plumbing ------------------------------------------------
 
@@ -118,6 +235,8 @@ class EvaluationEngine:
             self._cache.clear()
             self.hits = 0
             self.misses = 0
+            self.warmup_hits = 0
+            self.worker_enumerations = 0
 
     # -- process-pool plumbing -----------------------------------------
 
@@ -134,6 +253,7 @@ class EvaluationEngine:
             self._procpool = ProcessPoolExecutor(max_workers=n,
                                                  mp_context=ctx)
             self._procpool_size = n
+            self._shipped_keys = set()     # fresh workers know nothing
             atexit.register(self._shutdown_process_pool)
         return self._procpool
 
@@ -144,14 +264,56 @@ class EvaluationEngine:
             self._procpool.shutdown(wait=True, cancel_futures=True)
             self._procpool = None
             self._procpool_size = 0
+            self._shipped_keys = set()
+
+    def _prepare_warmup(self, pool: Sequence["Chiplet"],
+                        networks: dict[str, "OperatorGraph"],
+                        miss: list[str],
+                        ga: "GAConfig") -> "_WarmupShipment | None":
+        """Parent-side pre-fork warmup: enumerate (once, in the parent)
+        the option columns for every network's deterministic generation-0
+        genomes, then pack what the parent cache holds for this pool —
+        including blocks merged back from workers in earlier rounds —
+        into one shipment.  Workers are persistent, so only the delta
+        not yet shipped to the CURRENT pool goes out (across SA
+        iterations that is typically just the mutated SKU's blocks);
+        `_shipped_keys` resets whenever the pool is recreated.  A worker
+        respawned after a crash misses earlier shipments and simply
+        re-enumerates — a perf hiccup, never a correctness issue."""
+        from . import fusion
+        for name in miss:
+            graph = networks[name]
+            pop = fusion.initial_population(graph, list(pool), ga)
+            fusion.prefetch_population_options(graph, pop, pool, ga)
+        keys = [k for k in fusion.matching_option_keys(pool, ga)
+                if k not in self._shipped_keys]
+        if not keys:
+            return None
+        self._shipped_keys.update(keys)
+        meta, matrix = fusion.export_option_columns(keys)
+        if not meta:
+            return None
+        try:
+            from multiprocessing import shared_memory
+            shm = shared_memory.SharedMemory(create=True,
+                                             size=max(matrix.nbytes, 1))
+            import numpy as np
+            np.ndarray(matrix.shape, dtype=matrix.dtype,
+                       buffer=shm.buf)[:] = matrix
+            return _WarmupShipment(("shm", shm.name, matrix.shape,
+                                    matrix.dtype.str, meta), shm)
+        except Exception:                  # no shm on this platform
+            return _WarmupShipment(("pickle", matrix, meta))
 
     def _map_process(self, pool: Sequence["Chiplet"],
                      networks: dict[str, "OperatorGraph"],
                      names: list[str], objective: str,
                      reqs: dict[str, "Requirement"], ga: "GAConfig",
-                     n_workers: int) -> "list[FusionResult | None] | None":
+                     n_workers: int,
+                     warmup: bool) -> "list[FusionResult | None] | None":
         """Fan cache misses out over the process pool; None = could not
         use processes (caller falls back to the thread path)."""
+        from . import fusion
         from .fusion import Requirement
         keys = {name: self._key(pool, networks[name], objective,
                                 reqs.get(name, Requirement()), ga)
@@ -166,16 +328,45 @@ class EvaluationEngine:
                 else:
                     miss.append(name)
         if miss:
+            # Pool first: creating/resizing it resets the shipped-key
+            # tracking the delta shipment below is computed against.
             try:
                 ex = self._ensure_process_pool(n_workers)
+            except Exception:
+                self._shutdown_process_pool()
+                return None
+            warm: "_WarmupShipment | None" = None
+            if warmup:
+                try:
+                    warm = self._prepare_warmup(pool, networks, miss, ga)
+                except Exception:
+                    warm = None
+            try:
+                payload = warm.payload if warm is not None else None
                 futs = {name: ex.submit(
                     _process_worker, engine_enabled(), tuple(pool),
                     networks[name], objective,
-                    reqs.get(name, Requirement()), ga) for name in miss}
-                got = {name: f.result() for name, f in futs.items()}
+                    reqs.get(name, Requirement()), ga, payload)
+                    for name in miss}
+                got = {}
+                for name, f in futs.items():
+                    res, wstats, ship = f.result()
+                    got[name] = res
+                    with self._lock:
+                        self.warmup_hits += wstats["installed"]
+                        self.worker_enumerations += wstats["enumerated"]
+                    try:
+                        # Merge worker-discovered blocks into the parent
+                        # cache so the next round's shipment covers them.
+                        fusion.import_option_columns(*ship)
+                    except Exception:
+                        pass
             except Exception:            # spawn/pickle failure: thread path
                 self._shutdown_process_pool()
                 return None
+            finally:
+                if warm is not None:
+                    warm.close()
             with self._lock:
                 for name in miss:
                     key = keys[name]
@@ -218,7 +409,8 @@ class EvaluationEngine:
                       reqs: dict[str, "Requirement"] | None,
                       ga: "GAConfig",
                       workers: int | None = None,
-                      executor: str | None = None
+                      executor: str | None = None,
+                      warmup: bool | None = None
                       ) -> tuple[float, dict[str, "FusionResult"]]:
         """(geomean objective value, per-network best design)."""
         from .fusion import Requirement
@@ -226,6 +418,7 @@ class EvaluationEngine:
         names = list(networks)
         n_workers = self.workers if workers is None else workers
         kind = self.executor if executor is None else executor
+        warm = self.warmup if warmup is None else warmup
 
         def one(name: str) -> "FusionResult | None":
             return self.evaluate_network(pool, networks[name], objective,
@@ -235,7 +428,8 @@ class EvaluationEngine:
         if n_workers > 1 and len(names) > 1:
             if kind == "process":
                 results = self._map_process(pool, networks, names,
-                                            objective, reqs, ga, n_workers)
+                                            objective, reqs, ga, n_workers,
+                                            warm)
             if results is None:
                 with ThreadPoolExecutor(max_workers=n_workers) as ex:
                     results = list(ex.map(one, names))
@@ -256,8 +450,10 @@ DEFAULT_ENGINE = EvaluationEngine()
 
 
 def clear_all_caches() -> None:
-    """Reset every cross-call cache in the codesign stack (engine memo +
-    fusion's stage-option LRUs) — used for fair before/after timing."""
-    from . import fusion
+    """Reset every cross-call cache in the codesign stack (engine memo,
+    fusion's stage-option caches + latency-grid memo, perfmodel's
+    config-grid/chip-row LRUs) — used for fair before/after timing."""
+    from . import fusion, perfmodel
     DEFAULT_ENGINE.clear()
     fusion.clear_option_caches()
+    perfmodel.clear_perfmodel_caches()

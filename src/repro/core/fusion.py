@@ -21,18 +21,22 @@ import dataclasses
 import functools
 import math
 import random
-from typing import Sequence
+from typing import Iterable, Sequence
+
+import numpy as np
 
 from . import costmodel
 from .chiplets import Chiplet
-from .convexhull import (PipelineSolution, default_latency_grid,
-                         solve_pipeline)
+from .convexhull import (PipelineJob, PipelineSolution, clear_grid_cache,
+                         default_latency_grid, solve_pipeline,
+                         solve_pipeline_batch)
 from .memory import DDR5, HBM3, MEMORY_POOL, MemoryType
 from .operators import Operator, OperatorGraph
 from .engine import engine_enabled
-from .perfmodel import (BATCH_OPTIONS, StageOption, StageOptionSet,
-                        enumerate_stage_options,
-                        enumerate_stage_options_by_chiplet, is_memory_bound,
+from .perfmodel import (BATCH_OPTIONS, StageOption, StageOptionColumns,
+                        StageOptionSet, config_grid,
+                        enumerate_stage_columns_by_chiplet,
+                        enumerate_stage_options, is_memory_bound,
                         scale_option)
 
 
@@ -170,11 +174,23 @@ def groups_from_genome(graph: OperatorGraph, g: Genome) -> list[FusionGroup]:
 # wholesale (one vectorized evaluation covering every missing SKU), with
 # the same entry bound the old lru_cache had (FIFO eviction — long-lived
 # processes sweeping many networks/pools must not grow without bound).
-_chiplet_option_cache: dict[tuple, tuple[StageOption, ...]] = {}
+# Values are StageOptionColumns blocks (column arrays + shared config
+# tuple), the transport unit of the process-pool warmup below.
+_chiplet_option_cache: dict[tuple, StageOptionColumns] = {}
 _CHIPLET_CACHE_MAX = 500_000
 
+# Option-cache traffic counters.  `enumerated` counts (group, SKU)
+# blocks actually evaluated in this process; `installed` counts blocks
+# received pre-built through the warmup transport instead.  Workers
+# report both to the parent engine (`EvaluationEngine.stats()`).
+_warmup_stats = {"installed": 0, "enumerated": 0}
 
-def _chiplet_cache_put(key: tuple, val: tuple[StageOption, ...]) -> None:
+
+def warmup_stats() -> dict[str, int]:
+    return dict(_warmup_stats)
+
+
+def _chiplet_cache_put(key: tuple, val: StageOptionColumns) -> None:
     if len(_chiplet_option_cache) >= _CHIPLET_CACHE_MAX:
         _chiplet_option_cache.pop(next(iter(_chiplet_option_cache)))
     _chiplet_option_cache[key] = val
@@ -187,22 +203,24 @@ def _chiplet_cache_key(ops: tuple[Operator, ...], repeat: int,
     return (ops, repeat, chiplet, memory, fixed_batch, batches, name)
 
 
-def _chiplet_group_options(ops: tuple[Operator, ...], repeat: int,
+def _chiplet_group_columns(ops: tuple[Operator, ...], repeat: int,
                            chiplet: Chiplet, memory: MemoryType,
                            fixed_batch: int | None,
                            batches: tuple[int, ...],
-                           name: str) -> tuple[StageOption, ...]:
-    """Options for one fusion group on ONE chiplet SKU.  Keyed per SKU so
-    a single-SKU pool mutation (the SA neighbor move) re-enumerates only
-    the new SKU's options; the other pool members come from cache."""
+                           name: str) -> StageOptionColumns:
+    """Option columns for one fusion group on ONE chiplet SKU.  Keyed per
+    SKU so a single-SKU pool mutation (the SA neighbor move)
+    re-enumerates only the new SKU's options; the other pool members
+    come from cache."""
     key = _chiplet_cache_key(ops, repeat, chiplet, memory, fixed_batch,
                              batches, name)
     got = _chiplet_option_cache.get(key)
     if got is None:
-        got = tuple(enumerate_stage_options(
+        _warmup_stats["enumerated"] += 1
+        got = enumerate_stage_columns_by_chiplet(
             ops, (chiplet,), memories=(memory,), batches=batches, name=name,
             fixed_batch=fixed_batch, cost_fn=costmodel.stage_hw_cost,
-            repeat=repeat))
+            repeat=repeat)[chiplet]
         _chiplet_cache_put(key, got)
     return got
 
@@ -215,37 +233,118 @@ def prefetch_population_options(graph: OperatorGraph,
 
     Decodes every genome of a GA population, collects the distinct fusion
     groups they induce, and fills the per-(group, SKU) option cache with
-    ONE `perfmodel.evaluate_group_batch` call per distinct group covering
-    all its missing SKUs — instead of one scalar enumeration per
+    ONE batched-columns evaluation per distinct group covering all its
+    missing SKUs — instead of one scalar enumeration per
     (genome, group, SKU).  Results are bit-identical to the per-SKU path
     (the batched model is row-wise element-wise), so GA fitness values
     are unchanged; only the evaluation shape changes.
     """
     if not engine_enabled():
         return
+    _prefetch_group_options(
+        (gr for g in genomes for gr in groups_from_genome(graph, g)),
+        pool, cfg)
+
+
+def _prefetch_group_options(groups: "Iterable[FusionGroup]",
+                            pool: Sequence[Chiplet],
+                            cfg: GAConfig) -> None:
+    """Group-level core of the population prefetch: one batched-columns
+    evaluation per distinct group covering all its missing SKUs."""
     batches = tuple(cfg.batches)
     # dict keeps insertion order and dedupes caller-supplied dup SKUs
     skus = tuple(dict.fromkeys(pool))
     seen: set[tuple] = set()
-    for g in genomes:
-        for gr in groups_from_genome(graph, g):
-            gkey = (gr.ops, gr.repeat, gr.memory, gr.name)
-            if gkey in seen:
-                continue
-            seen.add(gkey)
-            missing = [c for c in skus if _chiplet_cache_key(
-                gr.ops, gr.repeat, c, gr.memory, cfg.fixed_batch, batches,
-                gr.name) not in _chiplet_option_cache]
-            if not missing:
-                continue
-            grouped = enumerate_stage_options_by_chiplet(
-                gr.ops, tuple(missing), memories=(gr.memory,),
-                batches=batches, name=gr.name, fixed_batch=cfg.fixed_batch,
-                cost_fn=costmodel.stage_hw_cost, repeat=gr.repeat)
-            for c, opts in grouped.items():
-                _chiplet_cache_put(_chiplet_cache_key(
-                    gr.ops, gr.repeat, c, gr.memory, cfg.fixed_batch,
-                    batches, gr.name), opts)
+    for gr in groups:
+        gkey = (gr.ops, gr.repeat, gr.memory, gr.name)
+        if gkey in seen:
+            continue
+        seen.add(gkey)
+        missing = [c for c in skus if _chiplet_cache_key(
+            gr.ops, gr.repeat, c, gr.memory, cfg.fixed_batch, batches,
+            gr.name) not in _chiplet_option_cache]
+        if not missing:
+            continue
+        _warmup_stats["enumerated"] += len(missing)
+        grouped = enumerate_stage_columns_by_chiplet(
+            gr.ops, tuple(missing), memories=(gr.memory,),
+            batches=batches, name=gr.name, fixed_batch=cfg.fixed_batch,
+            cost_fn=costmodel.stage_hw_cost, repeat=gr.repeat)
+        for c, block in grouped.items():
+            _chiplet_cache_put(_chiplet_cache_key(
+                gr.ops, gr.repeat, c, gr.memory, cfg.fixed_batch,
+                batches, gr.name), block)
+
+
+# --- shared option-cache transport (process-pool warmup) --------------------
+
+def matching_option_keys(pool: Sequence[Chiplet],
+                         cfg: GAConfig) -> list[tuple]:
+    """Cache keys shippable to a worker evaluating `pool` under `cfg`:
+    the entry's SKU is in the pool and its batch axis matches the GA
+    config (the group axis is deliberately unfiltered — any group a
+    worker encounters again is worth having)."""
+    skus = set(pool)
+    batches = tuple(cfg.batches)
+    return [k for k in _chiplet_option_cache
+            if k[2] in skus and k[4] == cfg.fixed_batch and k[5] == batches]
+
+
+def export_option_columns(keys: Sequence[tuple]
+                          ) -> tuple[list[dict], np.ndarray]:
+    """Pack cached (group, SKU) blocks for transport: one flat float64
+    matrix with rows (t_cmp, e_dyn, p_static, hw_cost) and a metadata
+    list carrying each block's cache key and row span.  The matrix is
+    what rides shared memory; everything config-shaped is rebuilt on the
+    receiving side from the key (deterministic, bit-identical)."""
+    meta: list[dict] = []
+    parts: list[np.ndarray] = []
+    off = 0
+    for key in keys:
+        block = _chiplet_option_cache.get(key)
+        if block is None:
+            continue
+        n = len(block)
+        meta.append({"key": key, "off": off, "n": n,
+                     "flops": block.flops_per_sample})
+        if n:
+            parts.append(np.stack([block.t_cmp, block.e_dyn,
+                                   block.p_static, block.hw_cost_usd],
+                                  axis=1))
+        off += n
+    matrix = (np.concatenate(parts, axis=0) if parts
+              else np.empty((0, 4), dtype=np.float64))
+    return meta, matrix
+
+
+def import_option_columns(meta: Sequence[dict], matrix: np.ndarray) -> int:
+    """Install transported blocks into this process's option cache,
+    skipping keys already present.  Config tuples are rebuilt via the
+    memoized `config_grid` (same enumeration the sender ran), so an
+    installed block is bit-identical to enumerating locally — minus the
+    roofline-model evaluation.  Returns the number of blocks installed.
+    """
+    installed = 0
+    for e in meta:
+        key = e["key"]
+        if key in _chiplet_option_cache:
+            continue
+        ops, repeat, chiplet, memory, fixed_batch, batches, name = key
+        grid = config_grid(ops, (chiplet,), memories=(memory,),
+                           batches=batches, fixed_batch=fixed_batch)
+        if len(grid.cfgs) != e["n"]:    # sender/receiver model drift
+            continue
+        rows = matrix[e["off"]:e["off"] + e["n"]]
+        _chiplet_cache_put(key, StageOptionColumns(
+            t_cmp=np.ascontiguousarray(rows[:, 0]),
+            e_dyn=np.ascontiguousarray(rows[:, 1]),
+            p_static=np.ascontiguousarray(rows[:, 2]),
+            hw_cost_usd=np.ascontiguousarray(rows[:, 3]),
+            cfgs=grid.cfgs, group_name=name,
+            flops_per_sample=e["flops"], repeat=repeat))
+        installed += 1
+    _warmup_stats["installed"] += installed
+    return installed
 
 
 @functools.lru_cache(maxsize=200_000)
@@ -255,11 +354,9 @@ def _group_options_cached(ops: tuple[Operator, ...], repeat: int,
                           batches: tuple[int, ...],
                           name: str) -> StageOptionSet:
     if engine_enabled():
-        opts: list[StageOption] = []
-        for c in pool:
-            opts.extend(_chiplet_group_options(ops, repeat, c, memory,
-                                               fixed_batch, batches, name))
-        out = StageOptionSet(opts)
+        out = StageOptionSet.from_blocks(
+            _chiplet_group_columns(ops, repeat, c, memory, fixed_batch,
+                                   batches, name) for c in pool)
         out.columns()        # build once, reused by every genome eval
         return out
     raw = enumerate_stage_options(ops, pool, memories=(memory,),
@@ -272,6 +369,9 @@ def _group_options_cached(ops: tuple[Operator, ...], repeat: int,
 def clear_option_caches() -> None:
     _chiplet_option_cache.clear()
     _group_options_cached.cache_clear()
+    clear_grid_cache()
+    _warmup_stats["installed"] = 0
+    _warmup_stats["enumerated"] = 0
 
 
 def stage_options_for_groups(groups: Sequence[FusionGroup],
@@ -314,6 +414,56 @@ def evaluate_genome(graph: OperatorGraph, genome: Genome,
         return None
     return FusionResult(genome=genome, groups=groups, solution=sol,
                         value=sol.value)
+
+
+def evaluate_genomes(graph: OperatorGraph, genomes: Sequence[Genome],
+                     pool: Sequence[Chiplet], objective: str,
+                     req: Requirement, cfg: GAConfig,
+                     _solution_cache: dict
+                     ) -> dict[Genome, FusionResult | None]:
+    """Generation-batched Layer-3: one `solve_pipeline_batch` call for a
+    whole GA generation instead of a Python loop of per-genome
+    `solve_pipeline` calls.
+
+    Genomes are decoded, deduped onto distinct fusion plans (memory
+    genes of non-leading ops are silent, §4.2), and every plan missing
+    from the solution cache becomes one PipelineJob sharing the batched
+    sweep.  Results — including tie-breaks — are bit-identical to
+    calling `evaluate_genome` per genome, so the GA trajectory is
+    unchanged; only the evaluation shape is.
+    """
+    decoded: list[tuple[Genome, list[FusionGroup], tuple]] = []
+    for g in dict.fromkeys(genomes):
+        groups = groups_from_genome(graph, g)
+        decoded.append((g, groups, tuple(groups)))
+    if engine_enabled():
+        _prefetch_group_options((gr for _, groups, _ in decoded
+                                 for gr in groups), pool, cfg)
+    jobs: list[PipelineJob] = []
+    job_keys: list[tuple] = []
+    queued: set[tuple] = set()
+    for g, groups, key in decoded:
+        if key in _solution_cache or key in queued:
+            continue
+        options = stage_options_for_groups(groups, pool, cfg)
+        if any(not o for o in options):
+            _solution_cache[key] = None
+            continue
+        queued.add(key)
+        grid = default_latency_grid(options, n=cfg.latency_points)
+        jobs.append(PipelineJob(options, grid, max_e2e=req.max_e2e,
+                                n_stages=sum(gr.repeat for gr in groups)))
+        job_keys.append(key)
+    if jobs:
+        sols = solve_pipeline_batch(jobs, objective=objective)
+        for key, sol in zip(job_keys, sols):
+            _solution_cache[key] = sol
+    out: dict[Genome, FusionResult | None] = {}
+    for g, groups, key in decoded:
+        sol = _solution_cache[key]
+        out[g] = None if sol is None else FusionResult(
+            genome=g, groups=groups, solution=sol, value=sol.value)
+    return out
 
 
 # --- seeding ----------------------------------------------------------------
@@ -361,6 +511,24 @@ def _crossover(a: Genome, b: Genome, rng: random.Random) -> Genome:
                   a.mem_genes[:cut + 1] + b.mem_genes[cut + 1:])
 
 
+def initial_population(graph: OperatorGraph, pool: Sequence[Chiplet],
+                       cfg: GAConfig,
+                       rng: random.Random | None = None) -> list[Genome]:
+    """The GA's deterministic generation-0 population: the two roofline
+    seeds plus seeded mutations of the fused seed.  Factored out so the
+    process-pool warmup can decode the exact genomes a worker's GA will
+    evaluate first — without running the GA.  When `rng` is supplied
+    (by `optimize_fusion`), its state advances exactly as the inlined
+    seeding loop used to, preserving fixed-seed GA trajectories."""
+    rng = rng if rng is not None else random.Random(cfg.seed)
+    seeds = [_roofline_seed(graph, pool, fuse=True),
+             _roofline_seed(graph, pool, fuse=False)]
+    pop: list[Genome] = list(seeds)
+    while len(pop) < cfg.population:
+        pop.append(_mutate(seeds[0], rng, 0.3))
+    return pop
+
+
 def optimize_fusion(graph: OperatorGraph, pool: Sequence[Chiplet],
                     objective: str = "energy",
                     req: Requirement | None = None,
@@ -371,11 +539,7 @@ def optimize_fusion(graph: OperatorGraph, pool: Sequence[Chiplet],
     rng = random.Random(cfg.seed)
     n = len(graph.operators)
 
-    seeds = [_roofline_seed(graph, pool, fuse=True),
-             _roofline_seed(graph, pool, fuse=False)]
-    pop: list[Genome] = list(seeds)
-    while len(pop) < cfg.population:
-        pop.append(_mutate(seeds[0], rng, 0.3))
+    pop = initial_population(graph, pool, cfg, rng)
 
     cache: dict[Genome, FusionResult | None] = {}
     solution_cache: dict = {} if engine_enabled() else None
@@ -388,17 +552,23 @@ def optimize_fusion(graph: OperatorGraph, pool: Sequence[Chiplet],
         return math.inf if r is None else r.value
 
     def batch_eval(genomes: Sequence[Genome]) -> None:
-        """Evaluate a whole population: batched option enumeration across
-        every distinct fusion group first, then the (now cache-hitting)
-        per-genome Layer-3 solves.  Selection/crossover/mutation below
-        never touch the rng during evaluation, so the GA trajectory is
-        identical to scalar per-genome evaluation."""
+        """Evaluate a whole generation: batched option enumeration across
+        every distinct fusion group first, then ONE generation-batched
+        Layer-3 solve (`evaluate_genomes`) covering every distinct
+        fusion plan.  Selection/crossover/mutation below never touch the
+        rng during evaluation, so the GA trajectory is identical to
+        scalar per-genome evaluation."""
         todo = [g for g in dict.fromkeys(genomes) if g not in cache]
         if not todo:
             return
-        prefetch_population_options(graph, todo, pool, cfg)
-        for g in todo:
-            fit(g)
+        if solution_cache is not None:
+            # evaluate_genomes prefetches options for the decoded groups
+            # itself (one decode pass shared with the solve batch).
+            cache.update(evaluate_genomes(graph, todo, pool, objective,
+                                          req, cfg, solution_cache))
+        else:
+            for g in todo:
+                fit(g)
 
     for _ in range(cfg.generations):
         batch_eval(pop)

@@ -12,7 +12,10 @@ pipeline with a common per-sample initiation interval T.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import functools
+import itertools
 import math
 from typing import Callable, Iterable, Sequence
 
@@ -177,54 +180,208 @@ def scale_option(o: StageOption, repeat: int) -> StageOption:
         flops_per_sample=o.flops_per_sample * repeat, repeat=repeat)
 
 
+@dataclasses.dataclass(frozen=True)
+class StageOptionColumns:
+    """Column-major form of one (fusion group, chiplet SKU) option block.
+
+    This is the value the per-SKU option cache stores and the process-pool
+    warmup ships between processes: four float64 columns plus the shared
+    per-block metadata.  StageOption objects are materialized lazily (via
+    `option`) only when a solver actually selects one, which skips the
+    dominant cost of eager enumeration — constructing tens of thousands
+    of dataclass instances that the sweep never touches.
+    """
+
+    t_cmp: np.ndarray
+    e_dyn: np.ndarray
+    p_static: np.ndarray
+    hw_cost_usd: np.ndarray
+    cfgs: tuple[StageConfig, ...]
+    group_name: str = ""
+    flops_per_sample: float = 0.0
+    repeat: int = 1
+    # per-block derived caches (e.g. dominance-pruned indices), keyed by
+    # the weighted flag; excluded from equality/repr.
+    _derived: dict = dataclasses.field(default_factory=dict, repr=False,
+                                       compare=False)
+
+    def __len__(self) -> int:
+        return len(self.cfgs)
+
+    def keep_idx(self, weighted: bool) -> np.ndarray:
+        """Indices of options not dominated within THIS block.  Within-
+        block dominance implies full-set dominance, and dominance is
+        transitive (including the earlier-index tie-break, which block
+        concatenation order preserves), so pre-pruning per block before
+        the cross-SKU pass keeps exactly the full-set survivor set —
+        while caching the quadratic mask per block, shared by every
+        pool and genome that reuses the block."""
+        got = self._derived.get(weighted)
+        if got is None:
+            w = np.maximum(self.hw_cost_usd, 1e-9) if weighted else 1.0
+            got = np.flatnonzero(envelope_keep_mask(
+                self.t_cmp, self.p_static * w, self.e_dyn * w))
+            self._derived[weighted] = got
+        return got
+
+    def option(self, i: int) -> StageOption:
+        """Materialize option i — bit-identical to eager enumeration
+        (the floats are copied verbatim from the batched evaluation)."""
+        return StageOption(
+            t_cmp=float(self.t_cmp[i]), e_dyn=float(self.e_dyn[i]),
+            p_static=float(self.p_static[i]),
+            hw_cost_usd=float(self.hw_cost_usd[i]), cfg=self.cfgs[i],
+            group_name=self.group_name,
+            flops_per_sample=self.flops_per_sample, repeat=self.repeat)
+
+    def options(self) -> tuple[StageOption, ...]:
+        return tuple(self.option(i) for i in range(len(self.cfgs)))
+
+
+_option_set_uid = itertools.count()
+
+
 class StageOptionSet(Sequence):
     """A sequence of StageOptions with lazily-built column arrays.
 
     `solve_pipeline` consumes the (t_cmp, e_dyn, p_static, hw_cost)
     columns directly when sweeping the iso-latency grid, so the arrays
     are built once per cached option set instead of once per GA genome.
+
+    Two construction modes: from materialized StageOptions (the seed
+    path), or via `from_blocks` from per-SKU StageOptionColumns (the
+    engine path) — there the columns are concatenated array blocks and
+    individual StageOptions materialize only on demand (`opts[i]` in a
+    solver's second pass).  `uid` is a process-unique token used to
+    memoize derived values (e.g. the default latency grid) per option
+    set without risking id() reuse after garbage collection.
     """
 
-    __slots__ = ("options", "_cols", "_pruned")
+    __slots__ = ("_options", "_blocks", "_offsets", "_cols", "_pruned",
+                 "uid")
 
-    def __init__(self, options: Iterable[StageOption]):
-        self.options = tuple(options)
+    def __init__(self, options: Iterable[StageOption] = ()):
+        self._options: tuple[StageOption, ...] | None = tuple(options)
+        self._blocks: tuple[StageOptionColumns, ...] | None = None
+        self._offsets: list[int] | None = None
         self._cols: tuple[np.ndarray, ...] | None = None
         self._pruned: dict[bool, tuple] = {}
+        self.uid = next(_option_set_uid)
+
+    @classmethod
+    def from_blocks(cls, blocks: Iterable[StageOptionColumns]
+                    ) -> "StageOptionSet":
+        self = cls.__new__(cls)
+        self._options = None
+        self._blocks = tuple(blocks)
+        offs = [0]
+        for b in self._blocks:
+            offs.append(offs[-1] + len(b))
+        self._offsets = offs
+        self._cols = None
+        self._pruned = {}
+        self.uid = next(_option_set_uid)
+        return self
+
+    @property
+    def options(self) -> tuple[StageOption, ...]:
+        if self._options is None:
+            self._options = tuple(o for b in self._blocks
+                                  for o in b.options())
+        return self._options
 
     def __len__(self) -> int:
-        return len(self.options)
+        if self._options is not None:
+            return len(self._options)
+        return self._offsets[-1]
 
     def __getitem__(self, i):
-        return self.options[i]
+        if self._options is not None:
+            return self._options[i]
+        if isinstance(i, slice):
+            return self.options[i]
+        n = self._offsets[-1]
+        if i < 0:
+            i += n
+        if not 0 <= i < n:
+            raise IndexError(i)
+        b = bisect.bisect_right(self._offsets, i) - 1
+        return self._blocks[b].option(i - self._offsets[b])
 
     def __iter__(self):
-        return iter(self.options)
+        if self._options is not None:
+            return iter(self._options)
+        return (o for b in self._blocks for o in b.options())
 
     def columns(self) -> tuple[np.ndarray, np.ndarray, np.ndarray,
                                np.ndarray]:
         if self._cols is None:
-            o = self.options
-            self._cols = (
-                np.array([x.t_cmp for x in o], dtype=np.float64),
-                np.array([x.e_dyn for x in o], dtype=np.float64),
-                np.array([x.p_static for x in o], dtype=np.float64),
-                np.array([x.hw_cost_usd for x in o], dtype=np.float64))
+            if self._blocks is not None:
+                bl = [b for b in self._blocks if len(b)]
+                if not bl:
+                    empty = np.empty(0, dtype=np.float64)
+                    self._cols = (empty,) * 4
+                else:
+                    self._cols = (
+                        np.concatenate([b.t_cmp for b in bl]),
+                        np.concatenate([b.e_dyn for b in bl]),
+                        np.concatenate([b.p_static for b in bl]),
+                        np.concatenate([b.hw_cost_usd for b in bl]))
+            else:
+                o = self._options
+                self._cols = (
+                    np.array([x.t_cmp for x in o], dtype=np.float64),
+                    np.array([x.e_dyn for x in o], dtype=np.float64),
+                    np.array([x.p_static for x in o], dtype=np.float64),
+                    np.array([x.hw_cost_usd for x in o], dtype=np.float64))
         return self._cols
 
     def pruned(self, weighted: bool) -> tuple[np.ndarray, np.ndarray,
                                               np.ndarray, np.ndarray]:
         """(t_cmp, slope, intercept, original_index) restricted to
         non-dominated options — exact: pruning never changes the envelope
-        minimum at any latency, nor the hull engine's tie-break winner."""
+        minimum at any latency, nor the hull engine's tie-break winner.
+
+        Block-built sets prune in two exact stages: each block's cached
+        within-block survivors first (see StageOptionColumns.keep_idx),
+        then the cross-SKU mask over the much smaller concatenation —
+        transitivity of the dominance relation makes the final survivor
+        set identical to a one-shot full mask."""
         cached = self._pruned.get(weighted)
-        if cached is None:
+        if cached is not None:
+            return cached
+        if self._blocks is not None:
+            ts, ss, cs, gs = [], [], [], []
+            for b, off in zip(self._blocks, self._offsets):
+                if not len(b):
+                    continue
+                kidx = b.keep_idx(weighted)
+                w = (np.maximum(b.hw_cost_usd[kidx], 1e-9) if weighted
+                     else 1.0)
+                ts.append(b.t_cmp[kidx])
+                ss.append(b.p_static[kidx] * w)
+                cs.append(b.e_dyn[kidx] * w)
+                gs.append(off + kidx)
+            if not ts:
+                empty = np.empty(0, dtype=np.float64)
+                cached = (empty, empty, empty,
+                          np.empty(0, dtype=np.intp))
+            else:
+                t_cmp = np.concatenate(ts)
+                slope = np.concatenate(ss)
+                icept = np.concatenate(cs)
+                gidx = np.concatenate(gs)
+                keep = np.flatnonzero(envelope_keep_mask(t_cmp, slope,
+                                                         icept))
+                cached = (t_cmp[keep], slope[keep], icept[keep],
+                          gidx[keep])
+        else:
             t_cmp, e_dyn, p_static, hw = self.columns()
             w = np.maximum(hw, 1e-9) if weighted else 1.0
             slope, icept = p_static * w, e_dyn * w
             idx = np.flatnonzero(envelope_keep_mask(t_cmp, slope, icept))
             cached = (t_cmp[idx], slope[idx], icept[idx], idx)
-            self._pruned[weighted] = cached
+        self._pruned[weighted] = cached
         return cached
 
 
@@ -252,22 +409,74 @@ def envelope_keep_mask(t_cmp: np.ndarray, slope: np.ndarray,
     return ~dominated
 
 
-def stage_config_grid(ops: Sequence[Operator],
-                      pool: Sequence[Chiplet],
-                      memories: Sequence[MemoryType] = MEMORY_POOL,
-                      batches: Sequence[int] = BATCH_OPTIONS,
-                      tps: Sequence[int] = TP_OPTIONS,
-                      fixed_batch: int | None = None,
-                      max_mem_units: int = 8) -> list[StageConfig]:
-    """The exact (chiplet, memory, mem_units, tp, batch) tuples a fusion
-    group is evaluated on — the `M` axis of Algorithm 1."""
-    capacity = sum(o.weight_bytes for o in ops) + \
-        max((o.act_in_bytes + o.act_out_bytes) for o in ops)
-    bs = (fixed_batch,) if fixed_batch is not None else tuple(batches)
+class ConfigGrid:
+    """A (chiplet, memory, mem_units, tp, batch) config grid with hoisted
+    per-config numeric columns.
+
+    The grid for a fusion group depends on the group's ops only through
+    its memory-capacity footprint, so identical grids recur constantly
+    across fusion groups, genomes, and SA iterations; `config_grid`
+    memoizes them.  The config-derived numeric arrays (batch, tp,
+    mem_units, bandwidth, DRAM energy) and the per-cost-function cost
+    rows are built once per distinct grid and reused by every batched
+    group evaluation on it ("grid hoisting")."""
+
+    __slots__ = ("cfgs", "chips", "chip_idx", "_numeric", "_cost_rows")
+
+    def __init__(self, cfgs: Iterable[StageConfig]):
+        self.cfgs = tuple(cfgs)
+        chip_index: dict[Chiplet, int] = {}
+        chips: list[Chiplet] = []
+        idx = np.empty(len(self.cfgs), dtype=np.intp)
+        for j, cfg in enumerate(self.cfgs):
+            i = chip_index.get(cfg.chiplet)
+            if i is None:
+                i = chip_index[cfg.chiplet] = len(chips)
+                chips.append(cfg.chiplet)
+            idx[j] = i
+        self.chips = tuple(chips)       # first-appearance order
+        self.chip_idx = idx
+        self._numeric: tuple[np.ndarray, ...] | None = None
+        self._cost_rows: dict[Callable, np.ndarray] = {}
+
+    def __len__(self) -> int:
+        return len(self.cfgs)
+
+    def numeric(self) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray, np.ndarray]:
+        """(batch, tp, mem_units, bw_per_unit, pj_per_bit) columns."""
+        if self._numeric is None:
+            cfgs = self.cfgs
+            self._numeric = (
+                np.array([c.batch for c in cfgs], dtype=np.float64),
+                np.array([c.tp for c in cfgs], dtype=np.float64),
+                np.array([c.mem_units for c in cfgs], dtype=np.float64),
+                np.array([c.memory.bw_per_unit for c in cfgs],
+                         dtype=np.float64),
+                np.array([c.memory.pj_per_bit for c in cfgs],
+                         dtype=np.float64))
+        return self._numeric
+
+    def cost_row(self, cost_fn: Callable[[StageConfig], float]
+                 ) -> np.ndarray:
+        row = self._cost_rows.get(cost_fn)
+        if row is None:
+            row = np.array([cost_fn(c) for c in self.cfgs],
+                           dtype=np.float64)
+            self._cost_rows[cost_fn] = row
+        return row
+
+
+def _build_config_grid(pool: tuple[Chiplet, ...],
+                       memories: tuple[MemoryType, ...],
+                       batches: tuple[int, ...], tps: tuple[int, ...],
+                       fixed_batch: int | None, max_mem_units: int,
+                       min_units_by_memory: tuple[int, ...]
+                       ) -> list[StageConfig]:
+    bs = (fixed_batch,) if fixed_batch is not None else batches
     cfgs: list[StageConfig] = []
     for c in pool:
-        for m in memories:
-            min_units = m.units_for(capacity, 0)
+        for m, min_units in zip(memories, min_units_by_memory):
             if min_units > max_mem_units:
                 continue
             for units in sorted({min_units, min(min_units * 2, max_mem_units),
@@ -280,48 +489,97 @@ def stage_config_grid(ops: Sequence[Operator],
     return cfgs
 
 
-def evaluate_group_batch(ops: Sequence[Operator],
-                         cfgs: Sequence[StageConfig],
-                         name: str = "",
-                         cost_fn: Callable[[StageConfig], float] | None = None,
-                         repeat: int = 1) -> list[StageOption]:
-    """Vectorized `evaluate_group` over a list of stage configs.
+@functools.lru_cache(maxsize=65536)
+def _config_grid_cached(pool: tuple, memories: tuple, batches: tuple,
+                        tps: tuple, fixed_batch: int | None,
+                        max_mem_units: int,
+                        min_units_by_memory: tuple[int, ...]) -> ConfigGrid:
+    return ConfigGrid(_build_config_grid(pool, memories, batches, tps,
+                                         fixed_batch, max_mem_units,
+                                         min_units_by_memory))
 
-    Every arithmetic step mirrors the scalar path operation-for-operation
-    (same association order, IEEE float64 throughout), so the returned
-    StageOptions are bit-identical to per-config `evaluate_group` calls.
-    repeat > 1 additionally folds `scale_option` into construction.
+
+def _group_capacity(ops: Sequence[Operator]) -> float:
+    return sum(o.weight_bytes for o in ops) + \
+        max((o.act_in_bytes + o.act_out_bytes) for o in ops)
+
+
+def config_grid(ops: Sequence[Operator], pool: Sequence[Chiplet],
+                memories: Sequence[MemoryType] = MEMORY_POOL,
+                batches: Sequence[int] = BATCH_OPTIONS,
+                tps: Sequence[int] = TP_OPTIONS,
+                fixed_batch: int | None = None,
+                max_mem_units: int = 8) -> ConfigGrid:
+    """Memoized ConfigGrid for a fusion group (the engine path).
+
+    The group's ops enter the grid only through the per-memory minimum
+    unit count its capacity footprint implies, so the cache is keyed on
+    that small derived tuple rather than the raw capacity — groups with
+    different weights but the same memory-unit needs share one grid
+    (and its hoisted numeric columns and cost rows)."""
+    capacity = _group_capacity(ops)
+    memories = tuple(memories)
+    min_units = tuple(m.units_for(capacity, 0) for m in memories)
+    return _config_grid_cached(tuple(pool), memories, tuple(batches),
+                               tuple(tps), fixed_batch, max_mem_units,
+                               min_units)
+
+
+@functools.lru_cache(maxsize=65536)
+def _chip_rows_cached(chips: tuple[Chiplet, ...],
+                      kinds: tuple[str, ...]) -> np.ndarray:
+    """Chiplet-derived model parameters per (chip set, operator kinds) —
+    the only ops-dependence is through the kinds, so rows are shared
+    across every fusion group with the same operator-kind signature."""
+    return np.array([(c.peak_flops, c.n_pes, c.glb_bytes,
+                      c.static_power_w, c.interchip_bw,
+                      *(c.utilization(k) for k in kinds),
+                      *(c.sram_traffic_factor(k) for k in kinds))
+                     for c in chips], dtype=np.float64)
+
+
+def clear_perfmodel_caches() -> None:
+    _config_grid_cached.cache_clear()
+    _chip_rows_cached.cache_clear()
+
+
+def stage_config_grid(ops: Sequence[Operator],
+                      pool: Sequence[Chiplet],
+                      memories: Sequence[MemoryType] = MEMORY_POOL,
+                      batches: Sequence[int] = BATCH_OPTIONS,
+                      tps: Sequence[int] = TP_OPTIONS,
+                      fixed_batch: int | None = None,
+                      max_mem_units: int = 8) -> list[StageConfig]:
+    """The exact (chiplet, memory, mem_units, tp, batch) tuples a fusion
+    group is evaluated on — the `M` axis of Algorithm 1.  Built fresh on
+    every call (the seed path is deliberately uncached; the engine path
+    goes through the memoized `config_grid`)."""
+    memories = tuple(memories)
+    capacity = _group_capacity(ops)
+    min_units = tuple(m.units_for(capacity, 0) for m in memories)
+    return _build_config_grid(tuple(pool), memories, tuple(batches),
+                              tuple(tps), fixed_batch, max_mem_units,
+                              min_units)
+
+
+def _group_numeric(ops: Sequence[Operator], grid: ConfigGrid
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched roofline evaluation of a fusion group over a config grid:
+    (t_cmp, e_dyn per sample, p_static) columns, before repeat scaling.
+
+    Every arithmetic step mirrors the scalar `evaluate_group` path
+    operation-for-operation (same association order, IEEE float64
+    throughout), so the columns are bit-identical to per-config calls.
+    Chiplet-derived values are computed once per distinct chiplet and
+    gathered; config-derived columns come prebuilt from the grid.
     """
-    if not cfgs:
-        return []
-    n = len(cfgs)
-    # Per-config parameter columns; chiplet-derived values are computed
-    # once per distinct chiplet and gathered.
-    chip_index: dict[Chiplet, int] = {}
-    chip_rows: list[tuple] = []
-    idx = np.empty(len(cfgs), dtype=np.intp)
-    for j, cfg in enumerate(cfgs):
-        c = cfg.chiplet
-        i = chip_index.get(c)
-        if i is None:
-            i = chip_index[c] = len(chip_rows)
-            chip_rows.append((c.peak_flops, c.n_pes, c.glb_bytes,
-                              c.static_power_w, c.interchip_bw,
-                              *(c.utilization(op.kind) for op in ops),
-                              *(c.sram_traffic_factor(op.kind)
-                                for op in ops)))
-        idx[j] = i
-    rows = np.array(chip_rows, dtype=np.float64)[idx]
+    n = len(grid)
+    rows = _chip_rows_cached(grid.chips,
+                             tuple(op.kind for op in ops))[grid.chip_idx]
     peak, n_pes, glb, p_stat, ic_bw = rows[:, :5].T
     util = rows[:, 5:5 + len(ops)].T
     stf = rows[:, 5 + len(ops):].T
-    B = np.array([cfg.batch for cfg in cfgs], dtype=np.float64)
-    tp = np.array([cfg.tp for cfg in cfgs], dtype=np.float64)
-    units = np.array([cfg.mem_units for cfg in cfgs], dtype=np.float64)
-    bw_pu = np.array([cfg.memory.bw_per_unit for cfg in cfgs],
-                     dtype=np.float64)
-    pj_bit = np.array([cfg.memory.pj_per_bit for cfg in cfgs],
-                      dtype=np.float64)
+    B, tp, units, bw_pu, pj_bit = grid.numeric()
 
     t_compute = np.zeros(n)
     e_mac = np.zeros(n)
@@ -368,25 +626,80 @@ def evaluate_group_batch(ops: Sequence[Operator],
     e_mem = dram * 8.0 * pj_bit * 1e-12
     e_dyn = (e_mac + sram_traffic * E_SRAM_BYTE + e_mem + e_link)
 
-    t_cmp = t_batch / B
-    e_per = e_dyn / B
-    p_static = p_stat * tp
+    return t_batch / B, e_dyn / B, p_stat * tp
+
+
+def _scaled_group_columns(ops: Sequence[Operator], grid: ConfigGrid,
+                          cost_fn: Callable[[StageConfig], float] | None,
+                          repeat: int
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     np.ndarray, float]:
+    """(t_cmp, e_dyn, p_static, hw_cost, flops_per_sample) with repeat
+    folded in — scale_option semantics: energy/leakage/cost/FLOPs scale
+    with the physical copy count, per-stage latency doesn't."""
+    t_cmp, e_per, p_static = _group_numeric(ops, grid)
     flops_per_sample = sum(o.flops for o in ops)
     if repeat != 1:
-        # scale_option folded in: energy/leakage/cost/FLOPs scale with
-        # the physical copy count, per-stage latency doesn't.
         e_per = e_per * repeat
         p_static = p_static * repeat
         flops_per_sample = flops_per_sample * repeat
+    if cost_fn is None:
+        hw = np.zeros(len(grid))
+    else:
+        hw = grid.cost_row(cost_fn) * repeat
+    return t_cmp, e_per, p_static, hw, flops_per_sample
+
+
+def evaluate_group_batch(ops: Sequence[Operator],
+                         cfgs: "Sequence[StageConfig] | ConfigGrid",
+                         name: str = "",
+                         cost_fn: Callable[[StageConfig], float] | None = None,
+                         repeat: int = 1) -> list[StageOption]:
+    """Vectorized `evaluate_group` over a list of stage configs.
+
+    The numeric core (`_group_numeric`) mirrors the scalar path
+    operation-for-operation, so the returned StageOptions are
+    bit-identical to per-config `evaluate_group` calls.  repeat > 1
+    additionally folds `scale_option` into construction.
+    """
+    if not len(cfgs):
+        return []
+    grid = cfgs if isinstance(cfgs, ConfigGrid) else ConfigGrid(cfgs)
+    t_cmp, e_per, p_static, hw, flops_per_sample = _scaled_group_columns(
+        ops, grid, cost_fn, repeat)
     t_cmp_l = t_cmp.tolist()
     e_per_l = e_per.tolist()
     p_static_l = p_static.tolist()
+    hw_l = hw.tolist()
     return [StageOption(
         t_cmp=t_cmp_l[j], e_dyn=e_per_l[j], p_static=p_static_l[j],
-        hw_cost_usd=0.0 if cost_fn is None else cost_fn(cfg) * repeat,
+        hw_cost_usd=hw_l[j],
         cfg=cfg, group_name=name, flops_per_sample=flops_per_sample,
         repeat=repeat)
-        for j, cfg in enumerate(cfgs)]
+        for j, cfg in enumerate(grid.cfgs)]
+
+
+def evaluate_group_columns(ops: Sequence[Operator], grid: ConfigGrid,
+                           name: str = "",
+                           cost_fn: Callable[[StageConfig], float]
+                           | None = None,
+                           repeat: int = 1) -> StageOptionColumns:
+    """Column form of `evaluate_group_batch`: same numeric core, no
+    per-option object construction."""
+    if not len(grid):
+        empty = np.empty(0, dtype=np.float64)
+        return StageOptionColumns(
+            t_cmp=empty, e_dyn=empty, p_static=empty, hw_cost_usd=empty,
+            cfgs=(), group_name=name,
+            flops_per_sample=(sum(o.flops for o in ops)
+                              * (repeat if repeat != 1 else 1)),
+            repeat=repeat)
+    t_cmp, e_per, p_static, hw, flops_per_sample = _scaled_group_columns(
+        ops, grid, cost_fn, repeat)
+    return StageOptionColumns(
+        t_cmp=t_cmp, e_dyn=e_per, p_static=p_static, hw_cost_usd=hw,
+        cfgs=grid.cfgs, group_name=name,
+        flops_per_sample=flops_per_sample, repeat=repeat)
 
 
 def enumerate_stage_options(
@@ -408,14 +721,17 @@ def enumerate_stage_options(
     hw_cost_usd at construction (saves a re-pricing pass); repeat folds
     `scale_option` into construction.
     """
-    cfgs = stage_config_grid(ops, pool, memories=memories, batches=batches,
-                             tps=tps, fixed_batch=fixed_batch,
-                             max_mem_units=max_mem_units)
     if vectorize is None:
         vectorize = engine_enabled()
     if vectorize:
-        return evaluate_group_batch(ops, cfgs, name=name, cost_fn=cost_fn,
+        grid = config_grid(ops, pool, memories=memories, batches=batches,
+                           tps=tps, fixed_batch=fixed_batch,
+                           max_mem_units=max_mem_units)
+        return evaluate_group_batch(ops, grid, name=name, cost_fn=cost_fn,
                                     repeat=repeat)
+    cfgs = stage_config_grid(ops, pool, memories=memories, batches=batches,
+                             tps=tps, fixed_batch=fixed_batch,
+                             max_mem_units=max_mem_units)
     out = [evaluate_group(ops, cfg, name=name) for cfg in cfgs]
     if cost_fn is not None:
         out = [dataclasses.replace(o, hw_cost_usd=cost_fn(o.cfg))
@@ -456,6 +772,60 @@ def enumerate_stage_options_by_chiplet(
     for o in opts:
         out[o.cfg.chiplet].append(o)
     return {c: tuple(v) for c, v in out.items()}
+
+
+def enumerate_stage_columns_by_chiplet(
+        ops: Sequence[Operator],
+        chiplets: Sequence[Chiplet],
+        memories: Sequence[MemoryType] = MEMORY_POOL,
+        batches: Sequence[int] = BATCH_OPTIONS,
+        tps: Sequence[int] = TP_OPTIONS,
+        name: str = "",
+        fixed_batch: int | None = None,
+        max_mem_units: int = 8,
+        cost_fn: Callable[[StageConfig], float] | None = None,
+        repeat: int = 1) -> dict[Chiplet, StageOptionColumns]:
+    """Column form of `enumerate_stage_options_by_chiplet`: one batched
+    evaluation over all SKUs' configs, split back into per-SKU
+    StageOptionColumns blocks.
+
+    `config_grid` emits each chiplet's configs contiguously and the
+    batched evaluation is row-wise element-wise, so every per-SKU block
+    is bit-identical to a separate single-SKU enumeration.  The split
+    arrays are copied so a cached block never pins the whole-pool
+    evaluation buffers (and stays contiguous for shared-memory export).
+    """
+    grid = config_grid(ops, chiplets, memories=memories, batches=batches,
+                       tps=tps, fixed_batch=fixed_batch,
+                       max_mem_units=max_mem_units)
+    block = evaluate_group_columns(ops, grid, name=name, cost_fn=cost_fn,
+                                   repeat=repeat)
+    spans: dict[Chiplet, list[int]] = {}
+    for j, cfg in enumerate(grid.cfgs):
+        span = spans.get(cfg.chiplet)
+        if span is None:
+            spans[cfg.chiplet] = [j, j + 1]
+        else:
+            span[1] = j + 1             # contiguous by construction
+    empty = np.empty(0, dtype=np.float64)
+    out: dict[Chiplet, StageOptionColumns] = {}
+    for c in chiplets:
+        span = spans.get(c)
+        if span is None:
+            out[c] = StageOptionColumns(
+                t_cmp=empty, e_dyn=empty, p_static=empty,
+                hw_cost_usd=empty, cfgs=(), group_name=name,
+                flops_per_sample=block.flops_per_sample, repeat=repeat)
+            continue
+        lo, hi = span
+        out[c] = StageOptionColumns(
+            t_cmp=block.t_cmp[lo:hi].copy(),
+            e_dyn=block.e_dyn[lo:hi].copy(),
+            p_static=block.p_static[lo:hi].copy(),
+            hw_cost_usd=block.hw_cost_usd[lo:hi].copy(),
+            cfgs=grid.cfgs[lo:hi], group_name=name,
+            flops_per_sample=block.flops_per_sample, repeat=repeat)
+    return out
 
 
 def is_memory_bound(op: Operator, chiplet: Chiplet, mem: MemoryType,

@@ -1,0 +1,388 @@
+"""PR-4 regressions: the generation-batched Layer-3 solve
+(`convexhull.solve_pipeline_batch` / `fusion.evaluate_genomes`) must be
+bit-identical to the per-genome path, and the process-pool shared
+option-cache warmup must ship bit-identical columns."""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import convexhull, engine, fusion, operators
+from repro.core.chiplets import Chiplet, default_pool
+from repro.core.convexhull import (
+    PipelineJob,
+    default_latency_grid,
+    solve_pipeline,
+    solve_pipeline_batch,
+)
+from repro.core.fusion import (
+    GAConfig,
+    Requirement,
+    _mutate,
+    evaluate_genome,
+    evaluate_genomes,
+    export_option_columns,
+    groups_from_genome,
+    import_option_columns,
+    initial_population,
+    matching_option_keys,
+    optimize_fusion,
+    prefetch_population_options,
+    stage_options_for_groups,
+)
+from repro.core.memory import HBM3
+from repro.core.perfmodel import StageConfig, StageOption, StageOptionSet
+
+
+@pytest.fixture(autouse=True)
+def _engine_state():
+    was = engine.engine_enabled()
+    engine.set_engine_enabled(True)
+    engine.clear_all_caches()
+    yield
+    engine.set_engine_enabled(was)
+    engine.clear_all_caches()
+
+
+def _rand_option(rng):
+    cfg = StageConfig(Chiplet(), HBM3, 1, 1, 1)
+    return StageOption(
+        t_cmp=rng.uniform(0.05, 10.0),
+        e_dyn=rng.uniform(0.1, 100.0),
+        p_static=rng.uniform(0.01, 5.0),
+        hw_cost_usd=rng.uniform(1.0, 1000.0),
+        cfg=cfg,
+    )
+
+
+def _rand_jobs(rng, allow_empty=True, as_sets=False):
+    jobs = []
+    for _ in range(rng.randint(1, 8)):
+        stages = []
+        for _ in range(rng.randint(1, 5)):
+            lo = 0 if allow_empty and rng.random() < 0.15 else 1
+            stages.append([_rand_option(rng) for _ in range(rng.randint(lo, 15))])
+        if as_sets:
+            stages = [StageOptionSet(s) for s in stages]
+        if rng.random() < 0.2 and len(stages[0]):
+            # exact duplicate options stress the tie-break rules
+            dup = list(stages[0])
+            dup.append(dup[0])
+            stages[0] = StageOptionSet(dup) if as_sets else dup
+        lat = sorted(rng.uniform(0.01, 15.0) for _ in range(rng.randint(1, 25)))
+        jobs.append(
+            PipelineJob(
+                stages,
+                lat,
+                max_interval=rng.choice([None, 5.0]),
+                max_e2e=rng.choice([None, 30.0]),
+                n_stages=rng.choice([None, len(stages) * 2]),
+            )
+        )
+    return jobs
+
+
+def _assert_batch_matches_scalar(jobs, objective, engine_kind="auto"):
+    got = solve_pipeline_batch(jobs, objective=objective, engine=engine_kind)
+    assert len(got) == len(jobs)
+    scalar_engine = "numpy" if engine_kind == "auto" else engine_kind
+    for j, g in zip(jobs, got):
+        want = solve_pipeline(
+            j.stage_options,
+            j.latencies,
+            objective=objective,
+            max_interval=j.max_interval,
+            max_e2e=j.max_e2e,
+            n_stages=j.n_stages,
+            engine=scalar_engine,
+        )
+        assert (g is None) == (want is None)
+        if g is None:
+            continue
+        # bit-exact, not approx
+        assert g.value == want.value and g.T == want.T
+        assert g.energy_per_sample == want.energy_per_sample
+        assert g.hw_cost_usd == want.hw_cost_usd
+        assert [o.cfg.label for o in g.stages] == [o.cfg.label for o in want.stages]
+        assert [o.t_cmp for o in g.stages] == [o.t_cmp for o in want.stages]
+
+
+@pytest.mark.parametrize("objective", ["energy", "edp", "energy_cost", "edp_cost"])
+def test_batch_bit_identical_all_objectives(objective):
+    for seed in range(25):
+        rng = random.Random(seed)
+        _assert_batch_matches_scalar(_rand_jobs(rng, as_sets=seed % 2 == 0), objective)
+
+
+def test_batch_empty_option_stages_yield_none():
+    cfg = StageConfig(Chiplet(), HBM3, 1, 1, 1)
+    opt = StageOption(1.0, 1.0, 1.0, 1.0, cfg)
+    jobs = [
+        PipelineJob([[opt], []], [1.0, 2.0]),
+        PipelineJob([[opt]], [1.0, 2.0]),
+        PipelineJob([StageOptionSet([])], [1.0, 2.0]),
+        PipelineJob([[opt]], [0.5]),  # infeasible: T < t_cmp
+        PipelineJob([[opt]], [1.0, 2.0], max_interval=1.0),
+    ]
+    got = solve_pipeline_batch(jobs, objective="energy")
+    assert got[0] is None
+    assert got[1] is not None
+    assert got[2] is None
+    assert got[3] is None
+    assert got[4] is not None and got[4].T <= 1.0
+
+
+def test_batch_dense_vs_hullvec_crossover(monkeypatch):
+    """Stages crossing HULLVEC_MIN_CELLS switch to the hull sweep inside
+    a batch exactly as the per-genome path does — force a tiny crossover
+    so one batch mixes dense and sweep stages."""
+    monkeypatch.setattr(convexhull, "HULLVEC_MIN_CELLS", 60)
+    for seed in range(10):
+        rng = random.Random(seed)
+        _assert_batch_matches_scalar(_rand_jobs(rng), "energy")
+        _assert_batch_matches_scalar(_rand_jobs(rng), "edp_cost")
+
+
+def test_batch_forced_hullvec_engine():
+    for seed in range(6):
+        rng = random.Random(seed)
+        _assert_batch_matches_scalar(_rand_jobs(rng), "energy", engine_kind="hullvec")
+
+
+def test_batch_chunking(monkeypatch):
+    """A batch larger than BATCH_MAX_CELLS is processed in chunks with
+    identical results."""
+    monkeypatch.setattr(convexhull, "BATCH_MAX_CELLS", 200)
+    rng = random.Random(0)
+    _assert_batch_matches_scalar(_rand_jobs(rng, allow_empty=False), "energy")
+
+
+def test_batch_solve_env_escape_hatch(monkeypatch):
+    monkeypatch.setenv("MOZART_BATCH_SOLVE", "0")
+    assert not engine.batch_solve_enabled()
+    rng = random.Random(3)
+    _assert_batch_matches_scalar(_rand_jobs(rng), "energy")
+    monkeypatch.delenv("MOZART_BATCH_SOLVE")
+    assert engine.batch_solve_enabled()
+
+
+# --- generation-batched GA ---------------------------------------------------
+
+
+def _graph():
+    return operators.paper_workloads(seq=512)["resnet50"]
+
+
+def _genomes(graph, pool, cfg, n=16, seed=7):
+    rng = random.Random(seed)
+    pop = initial_population(graph, pool, cfg)
+    out = list(pop)
+    while len(out) < n:
+        out.append(_mutate(rng.choice(pop), rng, 0.25))
+    return out
+
+
+def test_evaluate_genomes_matches_per_genome_loop():
+    graph = _graph()
+    pool = default_pool()[:4]
+    cfg = GAConfig(population=8, generations=2)
+    req = Requirement()
+    genomes = _genomes(graph, pool, cfg)
+    batched = evaluate_genomes(graph, genomes, pool, "energy", req, cfg, {})
+    scalar = {
+        g: evaluate_genome(graph, g, pool, "energy", req, cfg, _solution_cache={})
+        for g in genomes
+    }
+    assert set(batched) == set(scalar)
+    for g in genomes:
+        b, s = batched[g], scalar[g]
+        assert (b is None) == (s is None)
+        if b is None:
+            continue
+        assert b.value == s.value
+        assert b.solution.T == s.solution.T
+        b_labels = [o.cfg.label for o in b.solution.stages]
+        s_labels = [o.cfg.label for o in s.solution.stages]
+        assert b_labels == s_labels
+
+
+def test_fixed_seed_ga_identical_batched_vs_scalar_solve(monkeypatch):
+    """Equal budget, equal seed: the generation-batched GA returns the
+    exact design of the per-genome solve loop (MOZART_BATCH_SOLVE=0)
+    and of the engine-off scalar GA."""
+    graph = _graph()
+    cfg = GAConfig(population=6, generations=3)
+    batched = optimize_fusion(graph, default_pool(), objective="energy", cfg=cfg)
+    engine.clear_all_caches()
+    monkeypatch.setenv("MOZART_BATCH_SOLVE", "0")
+    loop = optimize_fusion(graph, default_pool(), objective="energy", cfg=cfg)
+    monkeypatch.delenv("MOZART_BATCH_SOLVE")
+    engine.set_engine_enabled(False)
+    engine.clear_all_caches()
+    seedpath = optimize_fusion(graph, default_pool(), objective="energy", cfg=cfg)
+    assert batched.value == loop.value == seedpath.value
+    assert batched.genome == loop.genome == seedpath.genome
+    labels = [
+        [o.cfg.label for o in r.solution.stages] for r in (batched, loop, seedpath)
+    ]
+    assert labels[0] == labels[1] == labels[2]
+
+
+def test_requirement_constraint_respected_in_batch():
+    graph = _graph()
+    pool = default_pool()[:3]
+    cfg = GAConfig(population=6, generations=1)
+    req = Requirement(e2e=5e-3)
+    genomes = _genomes(graph, pool, cfg, n=8)
+    batched = evaluate_genomes(graph, genomes, pool, "energy", req, cfg, {})
+    scalar = {
+        g: evaluate_genome(graph, g, pool, "energy", req, cfg, _solution_cache={})
+        for g in genomes
+    }
+    for g in genomes:
+        b, s = batched[g], scalar[g]
+        assert (b is None) == (s is None)
+        if b is not None:
+            assert b.solution.delay_e2e <= 5e-3 + 1e-12
+            assert b.value == s.value
+
+
+# --- latency-grid memoization (satellite bugfix) -----------------------------
+
+
+def test_default_latency_grid_memoized_per_option_set_key():
+    graph = _graph()
+    pool = default_pool()[:3]
+    cfg = GAConfig(population=4, generations=1)
+    g = initial_population(graph, pool, cfg)[0]
+    options = stage_options_for_groups(groups_from_genome(graph, g), pool, cfg)
+    convexhull.clear_grid_cache()
+    grid1 = default_latency_grid(options, n=cfg.latency_points)
+    key = (cfg.latency_points, *(o.uid for o in options))
+    assert key in convexhull._GRID_CACHE
+    grid2 = default_latency_grid(options, n=cfg.latency_points)
+    assert grid1 == grid2
+    # callers get copies: mutating a returned grid can't poison the memo
+    grid2[0] = -1.0
+    assert default_latency_grid(options, n=cfg.latency_points) == grid1
+    # a different n is a different key, not a stale hit
+    grid3 = default_latency_grid(options, n=cfg.latency_points + 8)
+    assert len(set(grid3)) >= len(set(grid1))
+
+
+def test_plain_list_inputs_not_cached():
+    rng = random.Random(0)
+    stages = [[_rand_option(rng) for _ in range(6)]]
+    convexhull.clear_grid_cache()
+    default_latency_grid(stages, n=16)
+    assert not convexhull._GRID_CACHE
+
+
+# --- shared option-cache transport (process-pool warmup) ---------------------
+
+
+def test_export_import_option_columns_roundtrip_bit_exact():
+    graph = _graph()
+    pool = default_pool()[:3]
+    cfg = GAConfig(population=4, generations=1)
+    pop = initial_population(graph, pool, cfg)
+    prefetch_population_options(graph, pop, pool, cfg)
+    keys = matching_option_keys(pool, cfg)
+    assert keys
+    before = {k: fusion._chiplet_option_cache[k] for k in keys}
+    meta, matrix = export_option_columns(keys)
+    assert matrix.shape[1] == 4 and len(meta) == len(keys)
+
+    fusion.clear_option_caches()
+    installed = import_option_columns(meta, matrix)
+    assert installed == len(keys)
+    assert fusion.warmup_stats()["installed"] == len(keys)
+    for k in keys:
+        a, b = before[k], fusion._chiplet_option_cache[k]
+        assert np.array_equal(a.t_cmp, b.t_cmp)
+        assert np.array_equal(a.e_dyn, b.e_dyn)
+        assert np.array_equal(a.p_static, b.p_static)
+        assert np.array_equal(a.hw_cost_usd, b.hw_cost_usd)
+        assert a.cfgs == b.cfgs
+        assert a.options() == b.options()  # full dataclass equality
+
+    # idempotent: re-import installs nothing new
+    assert import_option_columns(meta, matrix) == 0
+
+
+def test_import_skips_on_model_drift():
+    graph = _graph()
+    pool = default_pool()[:1]
+    cfg = GAConfig(population=2, generations=1)
+    pop = initial_population(graph, pool, cfg)
+    prefetch_population_options(graph, pop, pool, cfg)
+    keys = matching_option_keys(pool, cfg)
+    meta, matrix = export_option_columns(keys)
+    fusion.clear_option_caches()
+    meta[0] = dict(meta[0], n=meta[0]["n"] + 1)  # claim a wrong span
+    installed = import_option_columns(meta[:1], matrix)
+    assert installed == 0
+
+
+def test_engine_stats_exposed():
+    ev = engine.EvaluationEngine(workers=0)
+    s = ev.stats()
+    assert set(s) == {"hits", "misses", "warmup_hits", "worker_enumerations"}
+    assert all(v == 0 for v in s.values())
+
+
+def test_warmup_env_knob(monkeypatch):
+    monkeypatch.setenv("MOZART_WARMUP", "0")
+    assert engine.EvaluationEngine().warmup is False
+    monkeypatch.delenv("MOZART_WARMUP")
+    assert engine.EvaluationEngine().warmup is True
+    assert engine.EvaluationEngine(warmup=False).warmup is False
+
+
+def test_process_warmup_parity_and_counters(monkeypatch):
+    """MOZART_EXECUTOR=process with the shared-column warmup returns
+    results identical to serial, and the warmup-hit counter shows the
+    workers received pre-built blocks.  With a generations-0 GA the
+    deterministic generation-0 population is the whole search, so a
+    warmed worker enumerates NOTHING.  (Falls back to threads rather
+    than failing where spawn is unavailable — counters stay 0 there.)"""
+    ws = operators.paper_workloads(seq=512)
+    graphs = {"resnet50": ws["resnet50"], "opt66b_decode": ws["opt66b_decode"]}
+    ga = GAConfig(population=4, generations=0)
+    pool = default_pool()[:3]
+    s0, per0 = engine.EvaluationEngine(workers=0).evaluate_pool(
+        pool, graphs, "energy", None, ga
+    )
+    monkeypatch.setenv("MOZART_EXECUTOR", "process")
+    monkeypatch.setenv("MOZART_WORKERS", "2")
+    ev = engine.EvaluationEngine()
+    assert ev.executor == "process" and ev.warmup
+    try:
+        s1, per1 = ev.evaluate_pool(pool, graphs, "energy", None, ga)
+    finally:
+        ev._shutdown_process_pool()
+    assert s0 == s1
+    assert {n: r.value for n, r in per0.items()} == {
+        n: r.value for n, r in per1.items()
+    }
+    stats = ev.stats()
+    if stats["warmup_hits"]:  # process path actually ran
+        assert stats["worker_enumerations"] == 0
+
+
+def test_process_warmup_off_still_identical():
+    ws = operators.paper_workloads(seq=512)
+    graphs = {"resnet50": ws["resnet50"], "opt66b_decode": ws["opt66b_decode"]}
+    ga = GAConfig(population=4, generations=1)
+    pool = default_pool()[:3]
+    s0, _ = engine.EvaluationEngine(workers=0).evaluate_pool(
+        pool, graphs, "energy", None, ga
+    )
+    ev = engine.EvaluationEngine(workers=2, executor="process", warmup=False)
+    try:
+        s1, _ = ev.evaluate_pool(pool, graphs, "energy", None, ga)
+    finally:
+        ev._shutdown_process_pool()
+    assert s0 == s1
+    assert ev.stats()["warmup_hits"] == 0

@@ -220,14 +220,19 @@ def test_compare_gate_thresholds(tmp_path):
     finally:
         sys.path.pop(0)
     baselines = {"codesign_search": {"min_speedup": 2.0},
-                 "budget_scaling": {"require_monotone": True}}
+                 "budget_scaling": {"require_monotone": True},
+                 "batch_solve": {"min_speedup_vs_pr3": 1.5}}
 
-    def write(speedup, identical, mono):
+    def write(speedup, identical, mono, batch_speedup=3.0,
+              batch_identical=True):
         (tmp_path / "BENCH_codesign_search.json").write_text(json.dumps(
             {"speedup": speedup, "identical_best_design": identical}))
         (tmp_path / "BENCH_budget_scaling.json").write_text(json.dumps(
             {"monotone_sa": mono, "monotone_ga": mono,
              "sa_levels": [], "ga_levels": []}))
+        (tmp_path / "BENCH_batch_solve.json").write_text(json.dumps(
+            {"speedup_vs_pr3": batch_speedup,
+             "identical_solutions": batch_identical}))
 
     write(5.0, True, True)
     assert check(str(tmp_path), baselines) == []
@@ -237,5 +242,11 @@ def test_compare_gate_thresholds(tmp_path):
     assert any("identical" in f for f in check(str(tmp_path), baselines))
     write(5.0, True, False)          # non-monotone budget scaling
     assert any("monotone" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, batch_speedup=1.1)   # batched-solve regression
+    assert any("batch_solve" in f and "regressed" in f
+               for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, batch_identical=False)
+    assert any("identical solutions" in f
+               for f in check(str(tmp_path), baselines))
     assert any("missing artifact" in f
                for f in check(str(tmp_path / "nope"), baselines))
