@@ -1,0 +1,161 @@
+"""Serving throughput: compacted sub-batch decode vs the PR-4 schedule
+emulation.
+
+The Mozart policy's batch-agnostic split sets ``decode_batch`` below the
+engine's slot count.  PR 4 honored the split as a *schedule* — decode
+stayed static-shaped over ``max_batch``, so each sub-step paid the full
+per-step FLOPs.  The compacted engine gathers the active slots' cache
+slices, decodes at ``decode_batch`` width, and scatters back, so the
+narrow steps actually cost less.  Three fixed-seed engine runs over the
+same request trace:
+
+  * full      — decode_batch == max_batch (one wide lock-step batch);
+  * emulated  — decode_batch < max_batch, ``compact=False`` (the PR-4
+    round-robin emulation: narrow schedule, full-width compute);
+  * compacted — decode_batch < max_batch, compacted gather decode.
+
+Emulated and compacted must emit IDENTICAL tokens (asserted; greedy,
+fixed seed).  The gate in benchmarks/compare.py holds
+``speedup_compacted_vs_emulated`` above the baseline threshold.  Run as
+a module (``PYTHONPATH=src python -m benchmarks.bench_serving``) or via
+benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.serving.engine import Request, ServingEngine
+
+from .common import FAST, write_bench_json
+
+CFG = ModelConfig(
+    name="bench-serve",
+    n_layers=2 if FAST else 4,
+    d_model=256,
+    n_heads=8,
+    kv_heads=4,
+    head_dim=32,
+    d_ff=512,
+    vocab=512,
+    dtype="float32",
+    param_dtype="float32",
+    scan_min_layers=2,
+)
+MAX_BATCH = 8
+DECODE_BATCH = 2
+N_REQUESTS = 8 if FAST else 16
+MAX_NEW = 8 if FAST else 16
+MAX_LEN = 64
+
+
+def _requests(rng):
+    reqs = []
+    for i in range(N_REQUESTS):
+        plen = int(rng.integers(4, 12))
+        reqs.append(
+            Request(
+                rid=i,
+                prompt=rng.integers(0, CFG.vocab, size=plen).astype(np.int32),
+                max_new_tokens=MAX_NEW,
+            )
+        )
+    return reqs
+
+
+def _run_engine(params, *, decode_batch, compact):
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(
+        CFG,
+        params,
+        max_batch=MAX_BATCH,
+        max_len=MAX_LEN,
+        decode_batch=decode_batch,
+        compact=compact,
+    )
+    reqs = _requests(rng)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    toks = [r.out_tokens for r in reqs]
+    return toks, eng.stats, dt
+
+
+def run():
+    params = api.init_params(CFG, jax.random.PRNGKey(0))
+    rows = []
+    results = {}
+    # warmup pass per variant: the jitted decode/prefill are shared per
+    # (config, shape) via the engine's lru-cached builders, so a first
+    # run compiles and the timed second run measures steady-state.
+    for name, decode_batch, compact in (
+        ("full", MAX_BATCH, True),
+        ("emulated", DECODE_BATCH, False),
+        ("compacted", DECODE_BATCH, True),
+    ):
+        _run_engine(params, decode_batch=decode_batch, compact=compact)
+        toks, stats, dt = _run_engine(
+            params, decode_batch=decode_batch, compact=compact
+        )
+        tok_s = stats["tokens_out"] / max(dt, 1e-9)
+        us_per_step = dt * 1e6 / max(stats["decode_steps"], 1)
+        results[name] = {
+            "tokens": toks,
+            "tok_s": tok_s,
+            "us_per_step": us_per_step,
+            "decode_steps": stats["decode_steps"],
+            "wall_s": dt,
+        }
+        rows.append(
+            (
+                f"serving.{name}",
+                us_per_step,
+                f"tok_s={tok_s:.1f} steps={stats['decode_steps']}",
+            )
+        )
+
+    identical = results["compacted"]["tokens"] == results["emulated"]["tokens"]
+    assert identical, "compacted decode diverged from the emulated schedule"
+    speedup_step = (
+        results["emulated"]["us_per_step"] / results["compacted"]["us_per_step"]
+    )
+    speedup_wall = results["emulated"]["wall_s"] / results["compacted"]["wall_s"]
+    rows.append(
+        (
+            "serving.compacted_vs_emulated",
+            0.0,
+            f"{speedup_step:.2f}x_per_step {speedup_wall:.2f}x_wall "
+            f"identical_outputs={identical}",
+        )
+    )
+    write_bench_json(
+        "serving",
+        {
+            "max_batch": MAX_BATCH,
+            "decode_batch": DECODE_BATCH,
+            "n_requests": N_REQUESTS,
+            "max_new_tokens": MAX_NEW,
+            "tok_s_full": results["full"]["tok_s"],
+            "tok_s_emulated": results["emulated"]["tok_s"],
+            "tok_s_compacted": results["compacted"]["tok_s"],
+            "us_per_step_emulated": results["emulated"]["us_per_step"],
+            "us_per_step_compacted": results["compacted"]["us_per_step"],
+            "speedup_compacted_vs_emulated": speedup_step,
+            "speedup_wall_compacted_vs_emulated": speedup_wall,
+            "identical_outputs": identical,
+        },
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

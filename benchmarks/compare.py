@@ -96,6 +96,26 @@ def check(bench_dir: str, baselines: dict) -> list[str]:
             failures.append(
                 "batch_solve: batched generation evaluation no longer "
                 "produces identical solutions")
+
+    path = os.path.join(bench_dir, "BENCH_serving.json")
+    blob = _load(path)
+    base = baselines.get("serving", {})
+    if blob is None:
+        failures.append(f"missing artifact: {path}")
+    else:
+        min_speedup = float(base.get("min_speedup_compacted", 1.0))
+        speedup = float(blob.get("speedup_compacted_vs_emulated", 0.0))
+        if speedup < min_speedup:
+            failures.append(
+                f"serving compacted-decode speedup regressed: "
+                f"{speedup:.2f}x < baseline {min_speedup:.2f}x")
+        else:
+            print(f"OK serving: compacted decode {speedup:.2f}x >= "
+                  f"{min_speedup:.2f}x vs the schedule emulation")
+        if not blob.get("identical_outputs", False):
+            failures.append(
+                "serving: compacted decode no longer emits tokens "
+                "identical to the emulated schedule")
     return failures
 
 

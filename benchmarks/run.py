@@ -22,6 +22,7 @@ MODULES = [
     "bench_codesign_search",  # engine speedup: cached/vectorized vs seed
     "bench_budget_scaling",  # search quality vs budget (monotone axes)
     "bench_batch_solve",     # generation-batched Layer-3 vs per-genome
+    "bench_serving",         # compacted sub-batch decode vs PR-4 emulation
 ]
 
 

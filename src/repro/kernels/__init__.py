@@ -5,4 +5,7 @@
 #   rglru_scan/      — RG-LRU diagonal linear recurrence
 #   wkv6/            — RWKV6 chunked WKV recurrence
 #   moe_mlp/         — fused grouped expert-MLP (grouped GEMM + activation)
-from . import flash_attention, moe_mlp, rglru_scan, wkv6
+#   fused_mlp/       — fused dense gated-MLP (SwiGLU; serving fused_mlp flag)
+#   fused_norm/      — fused RMSNorm(+residual) (serving fused_norm flag)
+from . import (flash_attention, fused_mlp, fused_norm, moe_mlp, rglru_scan,
+               wkv6)

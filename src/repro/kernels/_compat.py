@@ -6,6 +6,16 @@ The TPU compiler-params class was renamed `TPUCompilerParams` ->
 from __future__ import annotations
 
 
+def on_tpu() -> bool:
+    """Shared backend probe: the ops wrappers default to interpret mode
+    off-TPU so the same kernel bodies run everywhere."""
+    import jax
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
 def tpu_compiler_params(**kwargs):
     from jax.experimental.pallas import tpu as pltpu
     cls = getattr(pltpu, "CompilerParams", None) \

@@ -12,14 +12,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._compat import on_tpu as _on_tpu
+
 from .kernel import flash_attention_bhsd
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",

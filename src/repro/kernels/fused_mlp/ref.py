@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused dense gated-MLP kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_mlp_ref(x, wg, wi, wo, *, swiglu: bool = True):
+    xf = x.astype(jnp.float32)
+    h = xf @ wi.astype(jnp.float32)
+    if swiglu:
+        g = xf @ wg.astype(jnp.float32)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return (h @ wo.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,42 @@
+"""Jit'd public wrappers for the fused RMSNorm(+residual) kernel.
+
+Model-layout API: x (and res) are (..., d) — leading dims are flattened
+into one token axis for the kernel.  On non-TPU backends this falls back
+to interpret mode (the kernel body runs in Python on CPU) so the SAME
+code path is exercised everywhere; on TPU it compiles via Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels._compat import on_tpu as _on_tpu
+
+from .kernel import fused_rmsnorm_pallas, fused_rmsnorm_residual_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bt", "interpret"))
+def fused_rmsnorm(
+    x, scale, *, eps: float = 1e-6, bt: int = 256, interpret: bool | None = None
+):
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    it = (not _on_tpu()) if interpret is None else interpret
+    out = fused_rmsnorm_pallas(xf, scale, eps=eps, bt=bt, interpret=it)
+    return out.reshape(*lead, x.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bt", "interpret"))
+def fused_rmsnorm_residual(
+    x, res, scale, *, eps: float = 1e-6, bt: int = 256, interpret: bool | None = None
+):
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    rf = res.reshape(-1, res.shape[-1])
+    it = (not _on_tpu()) if interpret is None else interpret
+    s, out = fused_rmsnorm_residual_pallas(
+        xf, rf, scale, eps=eps, bt=bt, interpret=it
+    )
+    return s.reshape(*lead, x.shape[-1]), out.reshape(*lead, x.shape[-1])

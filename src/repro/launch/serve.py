@@ -11,9 +11,12 @@ Mozart deployment artifact.
 
 `--policy` accepts either a `mozart.compile(...).save()` deployment
 artifact or a bare `ExecutionPolicy.to_json` file and *applies* it:
-fusion flags select the fused kernels (flash_attention -> the Pallas
-flash-attention prefill path), the policy's batch split sets the
-engine's max/decode batch, and the TP degree feeds mesh setup.
+fusion flags select the fused Pallas kernels (flash_attention ->
+attn_impl="flash", fused_mlp -> mlp_impl="fused", fused_norm ->
+norm_impl="fused"), the policy's batch split sets the engine's
+max/decode batch (decode runs COMPACTED at decode_batch width), and the
+TP degree builds the mesh the engine shards its params/cache/compute
+over.
 """
 from __future__ import annotations
 
@@ -49,12 +52,22 @@ def apply_policy(pol: ExecutionPolicy, mcfg: ModelConfig,
     if flags["flash_attention"]:
         mcfg = mcfg.replace(attn_impl="flash")
         applied.append("flash_attention->attn_impl=flash")
-    # fused_mlp / fused_norm have no dedicated serving hook yet (XLA
-    # fuses both inline); they are recorded so the log shows the full
-    # policy even where the substrate has nothing to toggle.
-    for k in ("fused_mlp", "fused_norm"):
-        if flags[k]:
-            applied.append(f"{k}(advisory)")
+    # the fused MLP/norm hooks live in the transformer family's
+    # mlp_block/apply_norm dispatch; other families (and layernorm
+    # archs) log an explicit no-op instead of claiming application
+    if flags["fused_mlp"]:
+        if mcfg.family == "transformer":
+            mcfg = mcfg.replace(mlp_impl="fused")
+            applied.append("fused_mlp->mlp_impl=fused")
+        else:
+            applied.append(f"fused_mlp(no hook: family={mcfg.family})")
+    if flags["fused_norm"]:
+        if mcfg.family == "transformer" and mcfg.norm == "rmsnorm":
+            mcfg = mcfg.replace(norm_impl="fused")
+            applied.append("fused_norm->norm_impl=fused")
+        else:
+            applied.append(f"fused_norm(no hook: family={mcfg.family}, "
+                           f"norm={mcfg.norm})")
     lines.append(f"[serve] policy network={pol.network} "
                  f"fusion flags: flash_attention={flags['flash_attention']} "
                  f"fused_mlp={flags['fused_mlp']} "
@@ -74,11 +87,9 @@ def apply_policy(pol: ExecutionPolicy, mcfg: ModelConfig,
 
     tp = pol.tp_degree
     if tp > 1 and n_devices % tp == 0 and n_devices >= tp:
-        # The mesh is built for sharding-aware callers; the lock-step
-        # engine itself does not shard yet, and the log says so.
         lines.append(f"[serve] policy tp={tp}: building mesh with model "
-                     f"axis {tp} over {n_devices} device(s) (engine "
-                     f"compute itself is not sharded yet)")
+                     f"axis {tp} over {n_devices} device(s); engine "
+                     f"params/cache/compute shard over it")
         mesh_tp = tp
     else:
         if tp > 1:
@@ -123,8 +134,9 @@ def main() -> None:
             from repro.launch.mesh import make_host_mesh
             mesh = make_host_mesh(model_axis=mesh_tp)
             axes = dict(zip(mesh.axis_names, mesh.devices.shape))
-            print(f"[serve] mesh built: {axes} (available to "
-                  f"sharding-aware model paths; engine runs unsharded)")
+            print(f"[serve] mesh built: {axes}; engine params/cache "
+                  f"placed with parallel.sharding rules")
+            kw["mesh"] = mesh
         eng_kwargs = kw
 
     params = api.init_params(mcfg, jax.random.PRNGKey(0))

@@ -48,7 +48,23 @@ def layernorm(x, scale, bias, eps=1e-5):
 def apply_norm(cfg: ModelConfig, p: Params, x):
     if cfg.norm == "layernorm":
         return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    if cfg.norm_impl == "fused":
+        from repro.kernels.fused_norm import ops as nops
+        return nops.fused_rmsnorm(x, p["scale"], eps=cfg.norm_eps)
     return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def apply_norm_residual(cfg: ModelConfig, p: Params, res, delta):
+    """Residual add + norm of the sum: returns (res + delta,
+    norm(res + delta)).  With cfg.norm_impl == "fused" the add and the
+    RMSNorm run as ONE Pallas kernel (the serving policy's fused_norm
+    flag); otherwise this is the plain two-op reference."""
+    if cfg.norm_impl == "fused" and cfg.norm != "layernorm":
+        from repro.kernels.fused_norm import ops as nops
+        return nops.fused_rmsnorm_residual(res, delta, p["scale"],
+                                           eps=cfg.norm_eps)
+    s = res + delta
+    return s, apply_norm(cfg, p, s)
 
 
 def init_norm(cfg: ModelConfig, key):
@@ -56,6 +72,27 @@ def init_norm(cfg: ModelConfig, key):
         return {"scale": jnp.ones((cfg.d_model,), cfg.jparam_dtype),
                 "bias": jnp.zeros((cfg.d_model,), cfg.jparam_dtype)}
     return {"scale": jnp.zeros((cfg.d_model,), cfg.jparam_dtype)}
+
+
+# --- dense MLP --------------------------------------------------------------
+
+def mlp_block(cfg: ModelConfig, p: Params, x):
+    """Dense (SwiGLU / GELU) MLP block.  cfg.mlp_impl == "fused" runs the
+    whole block — both projections, gate activation, down-projection — as
+    ONE Pallas kernel (the serving policy's fused_mlp flag); "dense" is
+    the plain XLA path."""
+    dt = cfg.jdtype
+    if cfg.mlp_impl == "fused":
+        from repro.kernels.fused_mlp import ops as mops
+        wg = p["w_gate"].astype(dt) if cfg.swiglu else None
+        return mops.fused_mlp(x, wg, p["w_in"].astype(dt),
+                              p["w_out"].astype(dt), swiglu=cfg.swiglu)
+    h = x @ p["w_in"].astype(dt)
+    if cfg.swiglu:
+        h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w_out"].astype(dt)
 
 
 # --- RoPE / M-RoPE ----------------------------------------------------------

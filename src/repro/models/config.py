@@ -84,6 +84,8 @@ class ModelConfig:
     norm_eps: float = 1e-6
     remat: str = "none"               # none | full | dots
     attn_impl: str = "auto"           # auto | einsum | chunked | local | flash
+    mlp_impl: str = "dense"           # dense | fused (Pallas fused gated-MLP)
+    norm_impl: str = "ref"            # ref | fused (Pallas RMSNorm(+residual))
     attn_chunk: int = 1024            # kv-chunk for chunked/local attention
     scan_layers: bool = True          # lax.scan over stacked layer params
     scan_min_layers: int = 8
@@ -125,6 +127,8 @@ class ModelConfig:
 
     def validate(self) -> None:
         assert self.family in ("transformer", "rglru", "rwkv6", "whisper")
+        assert self.mlp_impl in ("dense", "fused")
+        assert self.norm_impl in ("ref", "fused")
         if self.family == "transformer":
             assert self.n_heads % max(self.kv_heads, 1) == 0
         if self.use_moe:

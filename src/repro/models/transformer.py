@@ -17,9 +17,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .common import (apply_mrope, apply_norm, apply_rope, attention,
-                     attn_einsum, cross_entropy, dense_init, embed_init,
-                     init_norm, maybe_remat)
+from .common import (apply_mrope, apply_norm, apply_norm_residual,
+                     apply_rope, attention, attn_einsum, cross_entropy,
+                     dense_init, embed_init, init_norm, maybe_remat,
+                     mlp_block)
 from .config import ModelConfig
 
 Params = Any
@@ -164,15 +165,6 @@ def _mesh_axis_size(name: str) -> int:
             name in m.axis_names else 1
     except Exception:
         return 1
-
-
-def mlp_block(cfg: ModelConfig, p: Params, x):
-    h = x @ p["w_in"].astype(cfg.jdtype)
-    if cfg.swiglu:
-        h = jax.nn.silu(x @ p["w_gate"].astype(cfg.jdtype)) * h
-    else:
-        h = jax.nn.gelu(h)
-    return h @ p["w_out"].astype(cfg.jdtype)
 
 
 def _wsc(x, *spec):
@@ -483,8 +475,8 @@ def layer_fwd(cfg: ModelConfig, kind: str, p: Params, x, positions,
               mrope_positions=None):
     a, kv = attn_block(cfg, p["attn"], apply_norm(cfg, p["norm1"], x),
                        positions, mrope_positions)
-    x = x + a
-    h = apply_norm(cfg, p["norm2"], x)
+    # fused norm_impl runs the attn-residual add + norm2 as one kernel
+    x, h = apply_norm_residual(cfg, p["norm2"], x, a)
     if kind == "moe":
         x = x + moe_block(cfg, p["moe"], h)
     else:
@@ -764,8 +756,7 @@ def _decode_layer(cfg: ModelConfig, kind: str, p: Params, x, seg_cache,
     a, new_cache = _decode_attn(cfg, p["attn"],
                                 apply_norm(cfg, p["norm1"], x),
                                 seg_cache, index)
-    x = x + a
-    h = apply_norm(cfg, p["norm2"], x)
+    x, h = apply_norm_residual(cfg, p["norm2"], x, a)
     if kind == "moe":
         x = x + moe_block(cfg, p["moe"], h)
     else:

@@ -8,11 +8,28 @@ maps here as: decode batch size and prefill parallelism are set from the
 Mozart `ExecutionPolicy` (batch-agnostic attention wants small per-op
 batch with high TP; batch-sensitive projections want the opposite — the
 engine's `decode_batch` honors the policy's compromise).
+
+When `decode_batch < max_batch` the engine runs a COMPACTED sub-batch
+decode: the active slots' cache slices are gathered into a dense
+(decode_batch, ...) sub-cache, one static-shaped decode runs over that
+width, and the advanced slices are scattered back — so the policy's
+batch split saves real per-step FLOPs, not just schedule steps.  Slots
+rotate in slot-id order (the cursor is keyed to slot ids, not positions,
+so admission/finish churn cannot starve or double-serve a slot).  Set
+`compact=False` (or `MOZART_COMPACT_DECODE=0`) for the legacy full-width
+round-robin emulation, kept for benchmarking against the PR-4 behavior.
+
+A `mesh` with a >1 "model" axis makes the policy's TP degree real:
+params and KV cache are placed with `parallel.sharding`'s rules and the
+jitted prefill/decode run sharded over the mesh.  `mesh=None` is the
+single-device no-op path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+import functools
+import os
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -54,10 +71,53 @@ def _tree_set_slot(batched, single, b: int):
     return jax.tree.map(leaf, batched, single)
 
 
+def _gather_slots(cache, sel):
+    """Compact the cache slices of slots `sel` into a dense sub-cache.
+    Segment leaves are (L, B, C, ...) — batch on axis 1; "index" is (B,)."""
+    return {
+        "segments": jax.tree.map(lambda a: jnp.take(a, sel, axis=1),
+                                 cache["segments"]),
+        "index": jnp.take(cache["index"], sel, axis=0),
+    }
+
+
+def _scatter_slots(cache, sub, sel):
+    """Write an advanced sub-cache back into slots `sel`.  Padding lanes
+    duplicate a real slot with identical content, so repeated indices in
+    `sel` write identical values (scatter order is irrelevant)."""
+    segs = jax.tree.map(
+        lambda full, part: full.at[:, sel].set(part.astype(full.dtype)),
+        cache["segments"], sub["segments"])
+    idx = cache["index"].at[sel].set(sub["index"])
+    return {"segments": segs, "index": idx}
+
+
+_GATHER = jax.jit(_gather_slots)
+# the engine drops the old cache the moment the scatter returns, so the
+# full-size buffers are donated — on accelerators the scatter updates in
+# place instead of allocating a second (L, max_batch, clen, ...) cache
+_SCATTER = jax.jit(_scatter_slots, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=8)
+def _decode_fn(mcfg: ModelConfig):
+    """Shared per-config jitted decode (engines with the same config —
+    e.g. benchmark variants — reuse one trace cache).  Bounded: a config
+    sweep evicts old executables instead of retaining them forever."""
+    return jax.jit(lambda p, t, c: api.decode_step(mcfg, p, t, c))
+
+
+@functools.lru_cache(maxsize=8)
+def _prefill_fn(mcfg: ModelConfig, max_len: int):
+    return jax.jit(
+        lambda p, toks: api.prefill(mcfg, p, {"tokens": toks}, max_len))
+
+
 class ServingEngine:
     def __init__(self, mcfg: ModelConfig, params: Params, *,
                  max_batch: int = 4, max_len: int = 512,
-                 decode_batch: int | None = None, eos_id: int = -1):
+                 decode_batch: int | None = None, eos_id: int = -1,
+                 compact: bool | None = None, mesh=None):
         self.mcfg = mcfg
         self.params = params
         self.max_batch = max_batch
@@ -65,27 +125,34 @@ class ServingEngine:
         # Mozart Insight 2: batch-agnostic stages (attention) may want a
         # smaller lock-step decode batch than the slot count; when
         # decode_batch < max_batch only that many active slots advance
-        # per step, round-robin (the others' cache indices are rolled
-        # back exactly like idle slots, so results are unchanged).
-        # NOTE: the decode itself is static-shaped over max_batch slots,
-        # so on this substrate sub-batching changes the *schedule* (more
-        # steps, fewer tokens each), not the per-step compute — it
-        # emulates the policy's batching semantics; compute savings need
-        # a compacted gather (ROADMAP).
+        # per step, in slot-id rotation, over a compacted sub-cache.
         self.decode_batch = decode_batch or max_batch
-        self._rr = 0                  # round-robin cursor for sub-batching
+        if compact is None:
+            compact = os.environ.get("MOZART_COMPACT_DECODE", "1") != "0"
+        # the gather/scatter helpers know the transformer cache layout
+        # ({"segments": [(L, B, C, ...)], "index": (B,)}); other families
+        # ({"layers": [(B, ...)]}) fall back to the schedule emulation
+        self.compact = compact and mcfg.family == "transformer"
+        self._next_slot = 0           # rotation cursor: a SLOT ID
         self.eos_id = eos_id
         self.cache = api.init_cache(mcfg, max_batch, max_len)
         # per-slot cache lengths (vector index -> mixed-length batching)
         self.cache["index"] = jnp.zeros((max_batch,), jnp.int32)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.parallel.sharding import (cache_shardings,
+                                                 params_shardings)
+            self.params = jax.device_put(
+                params, params_shardings(mesh, params))
+            self.cache = jax.device_put(
+                self.cache, cache_shardings(mesh, self.cache,
+                                            mcfg.kv_heads, max_batch))
         self.slots: list[Request | None] = [None] * max_batch
         self.queue: list[Request] = []
         self.next_token = np.zeros((max_batch, 1), np.int32)
         self.key = jax.random.PRNGKey(0)
-        self._decode = jax.jit(
-            lambda p, t, c: api.decode_step(mcfg, p, t, c))
-        self._prefill = jax.jit(
-            lambda p, toks: api.prefill(mcfg, p, {"tokens": toks}, max_len))
+        self._decode = _decode_fn(mcfg)
+        self._prefill = _prefill_fn(mcfg, max_len)
         self.stats = {"decode_steps": 0, "prefills": 0,
                       "tokens_out": 0, "slot_occupancy": []}
 
@@ -105,10 +172,30 @@ class ServingEngine:
             self.cache = _tree_set_slot(self.cache, cache1, b)
             self.cache["index"] = idx_vec.at[b].set(len(req.prompt))
             self.slots[b] = req
-            tok = int(jnp.argmax(last[0, -1]))
+            self.key, k = jax.random.split(self.key)
+            tok = int(sample(last[0, -1:], k,
+                             temperature=req.temperature)[0])
             req.out_tokens.append(tok)
             self.next_token[b, 0] = tok
             self.stats["prefills"] += 1
+            self.stats["tokens_out"] += 1
+            if len(req.out_tokens) >= req.max_new_tokens or \
+                    tok == self.eos_id:
+                req.done = True          # budget spent at admission —
+                self.slots[b] = None     # never decode past max_new
+
+    def _select_active(self, all_active: list[int]) -> list[int]:
+        """Pick up to decode_batch slots in slot-id rotation.  The cursor
+        is a slot id (not a position into the active list), so slots
+        finishing or being admitted between steps cannot re-alias the
+        rotation into starving or double-serving a slot."""
+        if self.decode_batch >= len(all_active):
+            return list(all_active)
+        ordered = [b for b in all_active if b >= self._next_slot] + \
+                  [b for b in all_active if b < self._next_slot]
+        active = ordered[:self.decode_batch]
+        self._next_slot = (active[-1] + 1) % self.max_batch
+        return active
 
     # -- decode tick ---------------------------------------------------------
     def step(self) -> int:
@@ -117,30 +204,43 @@ class ServingEngine:
         all_active = [b for b, r in enumerate(self.slots) if r is not None]
         if not all_active:
             return 0
-        if self.decode_batch < len(all_active):
-            start = self._rr % len(all_active)
-            active = (all_active + all_active)[start:
-                                              start + self.decode_batch]
-            self._rr += self.decode_batch
+        active = self._select_active(all_active)
+        if self.compact and self.decode_batch < self.max_batch:
+            # compacted sub-batch decode: gather the active slots' cache
+            # slices, decode at static width decode_batch, scatter back.
+            # Padding lanes (fewer active than decode_batch) repeat the
+            # first active slot — identical inputs give identical lane
+            # results, so the duplicate scatter writes are idempotent.
+            sel = active + [active[0]] * (self.decode_batch - len(active))
+            sel_arr = jnp.asarray(sel, jnp.int32)
+            sub = _GATHER(self.cache, sel_arr)
+            logits, new_sub = self._decode(
+                self.params, jnp.asarray(self.next_token[sel]), sub)
+            self.cache = _SCATTER(self.cache, new_sub, sel_arr)
+            lane: dict[int, int] = {}
+            for j, b in enumerate(sel):
+                lane.setdefault(b, j)
         else:
-            active = all_active
-        logits, new_cache = self._decode(
-            self.params, jnp.asarray(self.next_token), self.cache)
-        self.cache = new_cache
+            logits, new_cache = self._decode(
+                self.params, jnp.asarray(self.next_token), self.cache)
+            self.cache = new_cache
+            # full-width decode advanced every slot; slots not advancing
+            # this step must not advance their cache index
+            inactive = [b for b in range(self.max_batch)
+                        if b not in active]
+            if inactive:
+                idx = self.cache["index"]
+                for b in inactive:
+                    idx = idx.at[b].add(-1)
+                self.cache["index"] = idx
+            lane = {b: b for b in active}
         self.stats["decode_steps"] += 1
         self.stats["slot_occupancy"].append(
             len(all_active) / self.max_batch)
-        # slots not advancing this step must not advance their cache index
-        inactive = [b for b in range(self.max_batch) if b not in active]
-        if inactive:
-            idx = self.cache["index"]
-            for b in inactive:
-                idx = idx.at[b].add(-1)
-            self.cache["index"] = idx
         for b in active:
             req = self.slots[b]
             self.key, k = jax.random.split(self.key)
-            tok = int(sample(logits[b, -1:], k,
+            tok = int(sample(logits[lane[b], -1:], k,
                              temperature=req.temperature)[0])
             req.out_tokens.append(tok)
             self.next_token[b, 0] = tok

@@ -73,6 +73,32 @@ def check_sharded_decode_matches_single():
     print("sharded_decode ok")
 
 
+def check_serving_engine_tp_matches_single():
+    """ServingEngine with a TP mesh (policy tp consumed) must emit the
+    same tokens as the unsharded single-device engine."""
+    from repro.serving.engine import Request, ServingEngine
+    mesh = make_mesh((2, 4), ("data", "model"))
+    params = api.init_params(CFG, jax.random.PRNGKey(0))
+    prompts = [np.arange(4 + i, dtype=np.int32) + i for i in range(4)]
+
+    def run(mesh_arg, decode_batch=None):
+        eng = ServingEngine(CFG, params, max_batch=4, max_len=32,
+                            decode_batch=decode_batch, mesh=mesh_arg)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [r.out_tokens for r in reqs]
+
+    want = run(None)
+    got = run(mesh)
+    assert got == want, (got, want)
+    got_sub = run(mesh, decode_batch=2)   # compacted decode, sharded
+    assert got_sub == want, (got_sub, want)
+    print("serving_tp ok")
+
+
 def check_pipeline_parallel():
     mesh = make_mesh((8,), ("pp",))
     n_stages, n_micro, mb, d = 8, 4, 2, 16
@@ -129,6 +155,7 @@ if __name__ == "__main__":
     import tempfile
     check_tp_dp_forward_matches_single()
     check_sharded_decode_matches_single()
+    check_serving_engine_tp_matches_single()
     check_pipeline_parallel()
     check_optimizer_shardings_cover_tree()
     with tempfile.TemporaryDirectory() as td:

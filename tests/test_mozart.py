@@ -289,6 +289,39 @@ def test_apply_policy_mapping():
     assert kw2["mesh_tp"] == 2
 
 
+def test_apply_policy_fused_mlp_norm_applied():
+    """fused_mlp / fused_norm are real substrate toggles now: they map to
+    ModelConfig.mlp_impl / norm_impl and are logged as applied (the
+    old '(advisory)' path is gone)."""
+    from repro.launch.serve import apply_policy
+    from repro.models.config import ModelConfig
+
+    pol = fake_policy(
+        [
+            ("qkv_proj+attention", 2, 1),
+            ("norm2+mlp", 16, 1),
+        ]
+    )
+    assert pol.fusion_flags() == {
+        "flash_attention": True,
+        "fused_mlp": True,
+        "fused_norm": True,
+    }
+    mcfg, kw, lines = apply_policy(pol, ModelConfig(), max_batch=8, n_devices=1)
+    assert mcfg.mlp_impl == "fused"
+    assert mcfg.norm_impl == "fused"
+    text = "\n".join(lines)
+    assert "fused_mlp->mlp_impl=fused" in text
+    assert "fused_norm->norm_impl=fused" in text
+    assert "advisory" not in text
+    # families without the dispatch hook log an explicit no-op instead
+    # of claiming application
+    rcfg = ModelConfig(family="rglru", attn_every=2)
+    mcfg_r, _, lines_r = apply_policy(pol, rcfg, max_batch=8, n_devices=1)
+    assert mcfg_r.mlp_impl == "dense" and mcfg_r.norm_impl == "ref"
+    assert "fused_mlp(no hook" in "\n".join(lines_r)
+
+
 def test_apply_policy_no_fusion():
     from repro.launch.serve import apply_policy
     from repro.models.config import ModelConfig

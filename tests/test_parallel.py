@@ -28,6 +28,6 @@ def test_multidevice_parallelism():
     stdout = _run("parallel_prog.py")
     assert "ALL_PARALLEL_OK" in stdout
     for marker in ("tp_dp_forward ok", "sharded_decode ok",
-                   "pipeline_parallel ok", "optimizer_shardings ok",
-                   "elastic_reshard ok"):
+                   "serving_tp ok", "pipeline_parallel ok",
+                   "optimizer_shardings ok", "elastic_reshard ok"):
         assert marker in stdout

@@ -221,10 +221,12 @@ def test_compare_gate_thresholds(tmp_path):
         sys.path.pop(0)
     baselines = {"codesign_search": {"min_speedup": 2.0},
                  "budget_scaling": {"require_monotone": True},
-                 "batch_solve": {"min_speedup_vs_pr3": 1.5}}
+                 "batch_solve": {"min_speedup_vs_pr3": 1.5},
+                 "serving": {"min_speedup_compacted": 1.1}}
 
     def write(speedup, identical, mono, batch_speedup=3.0,
-              batch_identical=True):
+              batch_identical=True, serving_speedup=1.5,
+              serving_identical=True):
         (tmp_path / "BENCH_codesign_search.json").write_text(json.dumps(
             {"speedup": speedup, "identical_best_design": identical}))
         (tmp_path / "BENCH_budget_scaling.json").write_text(json.dumps(
@@ -233,6 +235,9 @@ def test_compare_gate_thresholds(tmp_path):
         (tmp_path / "BENCH_batch_solve.json").write_text(json.dumps(
             {"speedup_vs_pr3": batch_speedup,
              "identical_solutions": batch_identical}))
+        (tmp_path / "BENCH_serving.json").write_text(json.dumps(
+            {"speedup_compacted_vs_emulated": serving_speedup,
+             "identical_outputs": serving_identical}))
 
     write(5.0, True, True)
     assert check(str(tmp_path), baselines) == []
@@ -247,6 +252,12 @@ def test_compare_gate_thresholds(tmp_path):
                for f in check(str(tmp_path), baselines))
     write(5.0, True, True, batch_identical=False)
     assert any("identical solutions" in f
+               for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, serving_speedup=1.0)  # compacted-decode regression
+    assert any("serving" in f and "regressed" in f
+               for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, serving_identical=False)
+    assert any("emulated schedule" in f
                for f in check(str(tmp_path), baselines))
     assert any("missing artifact" in f
                for f in check(str(tmp_path / "nope"), baselines))
