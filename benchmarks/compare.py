@@ -116,6 +116,23 @@ def check(bench_dir: str, baselines: dict) -> list[str]:
             failures.append(
                 "serving: compacted decode no longer emits tokens "
                 "identical to the emulated schedule")
+        max_rec = base.get("max_steady_state_recompiles")
+        if max_rec is not None:
+            rec = blob.get("steady_state_recompiles")
+            if rec is None:
+                failures.append(
+                    "serving: artifact lacks steady_state_recompiles — "
+                    "bench_serving must record the tracecheck counts")
+            else:
+                worst = max(rec.values())
+                if worst > int(max_rec):
+                    bad = {k: v for k, v in rec.items() if v > int(max_rec)}
+                    failures.append(
+                        f"serving: steady-state decode now recompiles "
+                        f"({bad}) — baseline allows {max_rec}")
+                else:
+                    print(f"OK serving: steady-state recompiles <= "
+                          f"{max_rec} across {sorted(rec)}")
     return failures
 
 

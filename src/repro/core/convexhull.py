@@ -20,6 +20,7 @@ Two interchangeable envelope engines are provided and cross-tested:
   * DynamicLowerHull — the paper's literal structure;
   * LiChaoTree       — same asymptotics, used as an independent oracle.
 """
+
 from __future__ import annotations
 
 import bisect
@@ -36,6 +37,7 @@ from .perfmodel import StageOption, StageOptionSet, envelope_keep_mask
 @dataclasses.dataclass
 class Line:
     """y = slope * x + intercept, tagged with its originating option."""
+
     slope: float
     intercept: float
     payload: object = None
@@ -48,19 +50,21 @@ class Line:
 # Dynamic lower hull with arbitrary-order insertion (paper Algorithm 1)
 # ---------------------------------------------------------------------------
 
+
 class DynamicLowerHull:
     """Lower envelope of lines; supports insertion in arbitrary slope order
     (BinarySearchInsert + RemoveIrrelevant) and O(log M) min-queries."""
 
     def __init__(self):
-        self._lines: list[Line] = []     # sorted by slope, envelope-only
+        self._lines: list[Line] = []  # sorted by slope, envelope-only
 
     @staticmethod
     def _bad(l1: Line, l2: Line, l3: Line) -> bool:
         """True if l2 is everywhere dominated by l1 and l3."""
         # intersection_x(l1,l3) <= intersection_x(l1,l2)  =>  l2 useless
-        return ((l3.intercept - l1.intercept) * (l2.slope - l1.slope)
-                <= (l2.intercept - l1.intercept) * (l3.slope - l1.slope))
+        return (l3.intercept - l1.intercept) * (l2.slope - l1.slope) <= (
+            l2.intercept - l1.intercept
+        ) * (l3.slope - l1.slope)
 
     def insert(self, line: Line) -> None:
         lines = self._lines
@@ -77,12 +81,10 @@ class DynamicLowerHull:
         lines.insert(pos, line)
         # RemoveIrrelevant: drop dominated neighbours on both sides.
         i = pos + 1
-        while 0 < i < len(lines) - 1 and self._bad(lines[i - 1], lines[i],
-                                                   lines[i + 1]):
+        while 0 < i < len(lines) - 1 and self._bad(lines[i - 1], lines[i], lines[i + 1]):
             lines.pop(i)
         i = pos - 1
-        while 0 < i < len(lines) - 1 and self._bad(lines[i - 1], lines[i],
-                                                   lines[i + 1]):
+        while 0 < i < len(lines) - 1 and self._bad(lines[i - 1], lines[i], lines[i + 1]):
             lines.pop(i)
             i -= 1
 
@@ -105,6 +107,7 @@ class DynamicLowerHull:
 # ---------------------------------------------------------------------------
 # Li Chao tree over a fixed query grid (independent oracle, same use)
 # ---------------------------------------------------------------------------
+
 
 class LiChaoTree:
     def __init__(self, xs: Sequence[float]):
@@ -153,10 +156,13 @@ class LiChaoTree:
 # Stage envelope: iso-latency sweep with activation thresholds
 # ---------------------------------------------------------------------------
 
-def stage_envelope(options: Sequence[StageOption],
-                   latencies: Sequence[float],
-                   cost_weight: Callable[[StageOption], float] = lambda o: 1.0,
-                   engine: str = "hull") -> list[tuple[float, StageOption | None]]:
+
+def stage_envelope(
+    options: Sequence[StageOption],
+    latencies: Sequence[float],
+    cost_weight: Callable[[StageOption], float] = lambda o: 1.0,
+    engine: str = "hull",
+) -> list[tuple[float, StageOption | None]]:
     """For each query latency T (ascending), the minimum of
     cost_weight(o) * (e_dyn + p_static*T) over options with t_cmp <= T.
 
@@ -164,10 +170,9 @@ def stage_envelope(options: Sequence[StageOption],
     """
     lat = list(latencies)
     order = sorted(range(len(lat)), key=lat.__getitem__)
-    opts = sorted(options, key=lambda o: o.t_cmp)    # SortTCompute
+    opts = sorted(options, key=lambda o: o.t_cmp)  # SortTCompute
     use_lichao = engine == "lichao"
-    hull = LiChaoTree([lat[i] for i in order]) if use_lichao \
-        else DynamicLowerHull()
+    hull = LiChaoTree([lat[i] for i in order]) if use_lichao else DynamicLowerHull()
 
     out: list[tuple[float, StageOption | None]] = [(math.inf, None)] * len(lat)
     j = 0
@@ -175,9 +180,9 @@ def stage_envelope(options: Sequence[StageOption],
         T = lat[i]
         while j < len(opts) and opts[j].t_cmp <= T:
             w = cost_weight(opts[j])
-            hull.insert(Line(slope=opts[j].p_static * w,
-                             intercept=opts[j].e_dyn * w,
-                             payload=opts[j]))
+            hull.insert(
+                Line(slope=opts[j].p_static * w, intercept=opts[j].e_dyn * w, payload=opts[j])
+            )
             j += 1
         line = hull.query_idx(qi) if use_lichao else hull.query(T)
         if line is not None:
@@ -189,8 +194,8 @@ def stage_envelope(options: Sequence[StageOption],
 # Vectorized O((M+Q) log M) hull sweep (the "true" Algorithm 1, batched)
 # ---------------------------------------------------------------------------
 
-def _hull_of(slope: np.ndarray, icept: np.ndarray
-             ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+
+def _hull_of(slope: np.ndarray, icept: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Lower-envelope hull of a block of lines: (slopes, intercepts,
     reversed breakpoints).  Monotone-chain build over slope-sorted lines
     using the same cross-multiplied dominance predicate as
@@ -200,12 +205,11 @@ def _hull_of(slope: np.ndarray, icept: np.ndarray
     keep: list[int] = []
     for j in range(s.size):
         if keep and s[keep[-1]] == s[j]:
-            continue                     # equal slope: lower intercept won
+            continue  # equal slope: lower intercept won
         while len(keep) >= 2:
             i1, i2 = keep[-2], keep[-1]
-            if ((c[j] - c[i1]) * (s[i2] - s[i1])
-                    <= (c[i2] - c[i1]) * (s[j] - s[i1])):
-                keep.pop()               # middle line everywhere dominated
+            if (c[j] - c[i1]) * (s[i2] - s[i1]) <= (c[i2] - c[i1]) * (s[j] - s[i1]):
+                keep.pop()  # middle line everywhere dominated
             else:
                 break
         keep.append(j)
@@ -216,8 +220,7 @@ def _hull_of(slope: np.ndarray, icept: np.ndarray
     return hs, hc, bxr
 
 
-def _hull_eval(hs: np.ndarray, hc: np.ndarray, bxr: np.ndarray,
-               T: np.ndarray) -> np.ndarray:
+def _hull_eval(hs: np.ndarray, hc: np.ndarray, bxr: np.ndarray, T: np.ndarray) -> np.ndarray:
     """Envelope minimum of a prebuilt hull at each query T (vectorized
     binary search over breakpoints; the ±1 neighbors are evaluated too so
     breakpoint rounding can never miss the true minimum line)."""
@@ -227,14 +230,12 @@ def _hull_eval(hs: np.ndarray, hc: np.ndarray, bxr: np.ndarray,
     idx = (n - 1) - np.searchsorted(bxr, T, side="right")
     lo = np.maximum(idx - 1, 0)
     hi = np.minimum(idx + 1, n - 1)
-    return np.minimum(np.minimum(hs[idx] * T + hc[idx],
-                                 hs[lo] * T + hc[lo]),
-                      hs[hi] * T + hc[hi])
+    return np.minimum(np.minimum(hs[idx] * T + hc[idx], hs[lo] * T + hc[lo]), hs[hi] * T + hc[hi])
 
 
-def stage_envelope_sweep(t_cmp: np.ndarray, slope: np.ndarray,
-                         icept: np.ndarray,
-                         latencies: np.ndarray) -> np.ndarray:
+def stage_envelope_sweep(
+    t_cmp: np.ndarray, slope: np.ndarray, icept: np.ndarray, latencies: np.ndarray
+) -> np.ndarray:
     """min over {j : t_cmp_j <= T} of (slope_j*T + icept_j), for every T
     of an ascending latency grid — values only, O((M+Q) log M).
 
@@ -252,15 +253,14 @@ def stage_envelope_sweep(t_cmp: np.ndarray, slope: np.ndarray,
         return out
     order = np.argsort(t_cmp, kind="stable")
     ts, ss, cs = t_cmp[order], slope[order], icept[order]
-    ks = np.searchsorted(ts, lat, side="right")   # active prefix per query
+    ks = np.searchsorted(ts, lat, side="right")  # active prefix per query
 
     hulls: dict[tuple[int, int], tuple] = {}
 
     def block(start: int, size: int) -> tuple:
         h = hulls.get((start, size))
         if h is None:
-            h = hulls[(start, size)] = _hull_of(ss[start:start + size],
-                                                cs[start:start + size])
+            h = hulls[(start, size)] = _hull_of(ss[start : start + size], cs[start : start + size])
         return h
 
     q = 0
@@ -301,15 +301,16 @@ def stage_envelope_bruteforce(options, latencies, cost_weight=lambda o: 1.0):
 # Pipeline solve (the full Layer-3 of the framework)
 # ---------------------------------------------------------------------------
 
+
 @dataclasses.dataclass
 class PipelineSolution:
     objective: str
-    value: float                       # objective value (lower is better)
-    T: float                           # per-sample initiation interval (s)
-    energy_per_sample: float           # J
-    delay_e2e: float                   # s (P * T, balanced pipeline)
+    value: float  # objective value (lower is better)
+    T: float  # per-sample initiation interval (s)
+    energy_per_sample: float  # J
+    delay_e2e: float  # s (P * T, balanced pipeline)
     hw_cost_usd: float
-    throughput: float                  # samples/s
+    throughput: float  # samples/s
     stages: list[StageOption]
 
     def metrics(self) -> dict[str, float]:
@@ -317,28 +318,42 @@ class PipelineSolution:
         # cost metrics use the solver's per-stage decomposition
         # sum_s E_s*$_s (paper §4.3.3 "multiply by the cost factor"),
         # keeping reported numbers consistent with optimized ones.
-        ec = sum((o.e_dyn + o.p_static * self.T) * o.hw_cost_usd
-                 for o in self.stages)
-        return {"energy": e, "edp": e * d, "energy_cost": ec,
-                "edp_cost": ec * d, "latency_e2e": d,
-                "throughput": self.throughput, "hw_cost_usd": c, "T": self.T}
+        ec = sum((o.e_dyn + o.p_static * self.T) * o.hw_cost_usd for o in self.stages)
+        return {
+            "energy": e,
+            "edp": e * d,
+            "energy_cost": ec,
+            "edp_cost": ec * d,
+            "latency_e2e": d,
+            "throughput": self.throughput,
+            "hw_cost_usd": c,
+            "T": self.T,
+        }
 
     def to_dict(self) -> dict:
-        return {"objective": self.objective, "value": self.value,
-                "T": self.T, "energy_per_sample": self.energy_per_sample,
-                "delay_e2e": self.delay_e2e,
-                "hw_cost_usd": self.hw_cost_usd,
-                "throughput": self.throughput,
-                "stages": [s.to_dict() for s in self.stages]}
+        return {
+            "objective": self.objective,
+            "value": self.value,
+            "T": self.T,
+            "energy_per_sample": self.energy_per_sample,
+            "delay_e2e": self.delay_e2e,
+            "hw_cost_usd": self.hw_cost_usd,
+            "throughput": self.throughput,
+            "stages": [s.to_dict() for s in self.stages],
+        }
 
     @staticmethod
     def from_dict(d: dict) -> "PipelineSolution":
         return PipelineSolution(
-            objective=d["objective"], value=d["value"], T=d["T"],
+            objective=d["objective"],
+            value=d["value"],
+            T=d["T"],
             energy_per_sample=d["energy_per_sample"],
-            delay_e2e=d["delay_e2e"], hw_cost_usd=d["hw_cost_usd"],
+            delay_e2e=d["delay_e2e"],
+            hw_cost_usd=d["hw_cost_usd"],
             throughput=d["throughput"],
-            stages=[StageOption.from_dict(s) for s in d["stages"]])
+            stages=[StageOption.from_dict(s) for s in d["stages"]],
+        )
 
 
 def _cost_weight_fn(objective: str) -> Callable[[StageOption], float]:
@@ -349,15 +364,17 @@ def _cost_weight_fn(objective: str) -> Callable[[StageOption], float]:
     return lambda o: 1.0
 
 
-def _option_columns(opts: Sequence[StageOption]
-                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
-                               np.ndarray]:
+def _option_columns(
+    opts: Sequence[StageOption],
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     if isinstance(opts, StageOptionSet):
         return opts.columns()
-    return (np.array([o.t_cmp for o in opts], dtype=np.float64),
-            np.array([o.e_dyn for o in opts], dtype=np.float64),
-            np.array([o.p_static for o in opts], dtype=np.float64),
-            np.array([o.hw_cost_usd for o in opts], dtype=np.float64))
+    return (
+        np.array([o.t_cmp for o in opts], dtype=np.float64),
+        np.array([o.e_dyn for o in opts], dtype=np.float64),
+        np.array([o.p_static for o in opts], dtype=np.float64),
+        np.array([o.hw_cost_usd for o in opts], dtype=np.float64),
+    )
 
 
 # Per-stage (kept options x latencies) cell count above which the dense
@@ -369,8 +386,9 @@ def _option_columns(opts: Sequence[StageOption]
 HULLVEC_MIN_CELLS = 2_000_000
 
 
-def _stage_cols(stage_options: Sequence[Sequence[StageOption]],
-                weighted: bool) -> list[tuple] | None:
+def _stage_cols(
+    stage_options: Sequence[Sequence[StageOption]], weighted: bool
+) -> list[tuple] | None:
     """Per-stage pruned (t_cmp, slope, intercept, original_index) columns,
     or None when any stage has no options (infeasible pipeline)."""
     cols: list[tuple] = []
@@ -390,10 +408,14 @@ def _stage_cols(stage_options: Sequence[Sequence[StageOption]],
     return cols
 
 
-def _build_solution(stage_options: Sequence[Sequence[StageOption]],
-                    cols: list[tuple], lat: list[float],
-                    total: np.ndarray, objective: str,
-                    P: int) -> PipelineSolution | None:
+def _build_solution(
+    stage_options: Sequence[Sequence[StageOption]],
+    cols: list[tuple],
+    lat: list[float],
+    total: np.ndarray,
+    objective: str,
+    P: int,
+) -> PipelineSolution | None:
     """argmin over the summed grid + second pass recovering each stage's
     winner at the winning T only.  Exact-tie break mirrors the hull
     engine: duplicate lines keep the first inserted, and insertion order
@@ -410,17 +432,25 @@ def _build_solution(stage_options: Sequence[Sequence[StageOption]],
         best_stages.append(opts[int(idx[cand[np.argmin(t_cmp[cand])]])])
     e = sum(o.e_dyn + o.p_static * best_T for o in best_stages)
     cost = sum(o.hw_cost_usd for o in best_stages)
-    return PipelineSolution(objective=objective, value=float(total[best_i]),
-                            T=best_T, energy_per_sample=e,
-                            delay_e2e=best_T * P, hw_cost_usd=cost,
-                            throughput=1.0 / best_T, stages=best_stages)
+    return PipelineSolution(
+        objective=objective,
+        value=float(total[best_i]),
+        T=best_T,
+        energy_per_sample=e,
+        delay_e2e=best_T * P,
+        hw_cost_usd=cost,
+        throughput=1.0 / best_T,
+        stages=best_stages,
+    )
 
 
-def _solve_pipeline_numpy(stage_options: Sequence[Sequence[StageOption]],
-                          lat: list[float], objective: str,
-                          P: int,
-                          force_sweep: bool = False
-                          ) -> PipelineSolution | None:
+def _solve_pipeline_numpy(
+    stage_options: Sequence[Sequence[StageOption]],
+    lat: list[float],
+    objective: str,
+    P: int,
+    force_sweep: bool = False,
+) -> PipelineSolution | None:
     """Vectorized iso-latency sweep.  Per stage, envelope values over the
     grid come from either a masked (options x latencies) dense array min
     or, above HULLVEC_MIN_CELLS (or with engine="hullvec"), the
@@ -433,8 +463,11 @@ def _solve_pipeline_numpy(stage_options: Sequence[Sequence[StageOption]],
     if cols is None:
         return None
     mins_rows: list[np.ndarray | None] = [None] * len(cols)
-    dense = [i for i, c in enumerate(cols)
-             if not force_sweep and c[0].size * latv.size < HULLVEC_MIN_CELLS]
+    dense = [
+        i
+        for i, c in enumerate(cols)
+        if not force_sweep and c[0].size * latv.size < HULLVEC_MIN_CELLS
+    ]
     for i, c in enumerate(cols):
         if i not in dense:
             mins_rows[i] = stage_envelope_sweep(c[0], c[1], c[2], latv)
@@ -452,20 +485,22 @@ def _solve_pipeline_numpy(stage_options: Sequence[Sequence[StageOption]],
         for i, row in zip(dense, mins):
             mins_rows[i] = row
     total = np.zeros(len(lat))
-    for row in mins_rows:             # per-stage add order preserved
+    for row in mins_rows:  # per-stage add order preserved
         total += row
     if objective in ("edp", "edp_cost"):
         total = total * (latv * P)
     return _build_solution(stage_options, cols, lat, total, objective, P)
 
 
-def solve_pipeline(stage_options: Sequence[Sequence[StageOption]],
-                   latencies: Sequence[float],
-                   objective: str = "energy",
-                   max_interval: float | None = None,
-                   max_e2e: float | None = None,
-                   n_stages: int | None = None,
-                   engine: str = "auto") -> PipelineSolution | None:
+def solve_pipeline(
+    stage_options: Sequence[Sequence[StageOption]],
+    latencies: Sequence[float],
+    objective: str = "energy",
+    max_interval: float | None = None,
+    max_e2e: float | None = None,
+    n_stages: int | None = None,
+    engine: str = "auto",
+) -> PipelineSolution | None:
     """Iso-latency with modified convex hull trick over a whole pipeline.
 
     objective: energy | edp | energy_cost | edp_cost.
@@ -489,12 +524,12 @@ def solve_pipeline(stage_options: Sequence[Sequence[StageOption]],
     if engine == "auto":
         engine = "numpy" if engine_enabled() else "hull"
     if engine in ("numpy", "hullvec"):
-        return _solve_pipeline_numpy(stage_options, lat, objective, P,
-                                     force_sweep=engine == "hullvec")
+        return _solve_pipeline_numpy(
+            stage_options, lat, objective, P, force_sweep=engine == "hullvec"
+        )
 
     w = _cost_weight_fn(objective)
-    envs = [stage_envelope(opts, lat, cost_weight=w, engine=engine)
-            for opts in stage_options]
+    envs = [stage_envelope(opts, lat, cost_weight=w, engine=engine) for opts in stage_options]
 
     best_val, best_T, best_stages = math.inf, None, None
     for i, T in enumerate(lat):
@@ -510,7 +545,7 @@ def solve_pipeline(stage_options: Sequence[Sequence[StageOption]],
         if not ok:
             continue
         if objective in ("edp", "edp_cost"):
-            val *= T * P                       # ObjFactor (Algorithm 1 l.23)
+            val *= T * P  # ObjFactor (Algorithm 1 l.23)
         if val < best_val:
             best_val, best_T, best_stages = val, T, stages
 
@@ -518,10 +553,16 @@ def solve_pipeline(stage_options: Sequence[Sequence[StageOption]],
         return None
     e = sum(o.e_dyn + o.p_static * best_T for o in best_stages)
     cost = sum(o.hw_cost_usd for o in best_stages)
-    return PipelineSolution(objective=objective, value=best_val, T=best_T,
-                            energy_per_sample=e, delay_e2e=best_T * P,
-                            hw_cost_usd=cost, throughput=1.0 / best_T,
-                            stages=best_stages)
+    return PipelineSolution(
+        objective=objective,
+        value=best_val,
+        T=best_T,
+        energy_per_sample=e,
+        delay_e2e=best_T * P,
+        hw_cost_usd=cost,
+        throughput=1.0 / best_T,
+        stages=best_stages,
+    )
 
 
 @dataclasses.dataclass
@@ -529,6 +570,7 @@ class PipelineJob:
     """One genome's Layer-3 solve, as an element of a generation batch:
     the per-stage option sets, the latency grid, and the constraints that
     `solve_pipeline` would receive for that genome."""
+
     stage_options: Sequence[Sequence[StageOption]]
     latencies: Sequence[float]
     max_interval: float | None = None
@@ -542,8 +584,9 @@ class PipelineJob:
 BATCH_MAX_CELLS = 8_000_000
 
 
-def _batch_dense_rows(blocks: list[tuple[int, int]], prepared: list,
-                      out_rows: dict[tuple[int, int], np.ndarray]) -> None:
+def _batch_dense_rows(
+    blocks: list[tuple[int, int]], prepared: list, out_rows: dict[tuple[int, int], np.ndarray]
+) -> None:
     """Evaluate every dense (job, stage) block of a generation in ONE
     segmented sweep.
 
@@ -556,8 +599,7 @@ def _batch_dense_rows(blocks: list[tuple[int, int]], prepared: list,
     sequence of the per-genome dense sweep — so the resulting rows are
     bit-identical to per-genome `_solve_pipeline_numpy` calls.
     """
-    M = np.array([prepared[pi][3][si][0].size for pi, si in blocks],
-                 dtype=np.int64)
+    M = np.array([prepared[pi][3][si][0].size for pi, si in blocks], dtype=np.int64)
     t_all = np.concatenate([prepared[pi][3][si][0] for pi, si in blocks])
     s_all = np.concatenate([prepared[pi][3][si][1] for pi, si in blocks])
     c_all = np.concatenate([prepared[pi][3][si][2] for pi, si in blocks])
@@ -568,21 +610,21 @@ def _batch_dense_rows(blocks: list[tuple[int, int]], prepared: list,
     # sliced away below, so its value is irrelevant (0 keeps it finite).
     lat_pad = np.zeros((len(job_ids), max_q))
     for pi in job_ids:
-        lat_pad[job_row[pi], :prepared[pi][0].size] = prepared[pi][0]
-    row_of_option = np.repeat(
-        np.array([job_row[pi] for pi, _ in blocks], dtype=np.intp), M)
-    T = lat_pad[row_of_option]            # (total options x max_q)
+        lat_pad[job_row[pi], : prepared[pi][0].size] = prepared[pi][0]
+    row_of_option = np.repeat(np.array([job_row[pi] for pi, _ in blocks], dtype=np.intp), M)
+    T = lat_pad[row_of_option]  # (total options x max_q)
     vals = s_all[:, None] * T
     vals += c_all[:, None]
     vals[t_all[:, None] > T] = math.inf
     starts = np.concatenate(([0], np.cumsum(M)))[:-1]
     mins = np.minimum.reduceat(vals, starts, axis=0)
     for b, (pi, si) in enumerate(blocks):
-        out_rows[(pi, si)] = mins[b, :prepared[pi][0].size]
+        out_rows[(pi, si)] = mins[b, : prepared[pi][0].size]
 
 
-def _batch_recover(blocks: list[tuple[int, int]], prepared: list,
-                   best_T: dict[int, float]) -> dict[tuple[int, int], int]:
+def _batch_recover(
+    blocks: list[tuple[int, int]], prepared: list, best_T: dict[int, float]
+) -> dict[tuple[int, int], int]:
     """Batched second pass: for every (job, stage) block, the index (into
     the block's pruned columns) of the winning option at the job's
     winning T — one flat segmented computation replacing the per-job
@@ -592,8 +634,7 @@ def _batch_recover(blocks: list[tuple[int, int]], prepared: list,
     options attaining the envelope minimum (exact float equality), the
     smallest t_cmp wins, and among equal t_cmp the lowest index (first
     inserted) wins."""
-    M = np.array([prepared[pi][3][si][0].size for pi, si in blocks],
-                 dtype=np.int64)
+    M = np.array([prepared[pi][3][si][0].size for pi, si in blocks], dtype=np.int64)
     starts = np.concatenate(([0], np.cumsum(M)))[:-1]
     t_all = np.concatenate([prepared[pi][3][si][0] for pi, si in blocks])
     s_all = np.concatenate([prepared[pi][3][si][1] for pi, si in blocks])
@@ -612,10 +653,9 @@ def _batch_recover(blocks: list[tuple[int, int]], prepared: list,
     return {blk: int(w) for blk, w in zip(blocks, win)}
 
 
-def solve_pipeline_batch(jobs: Sequence[PipelineJob],
-                         objective: str = "energy",
-                         engine: str = "auto"
-                         ) -> list[PipelineSolution | None]:
+def solve_pipeline_batch(
+    jobs: Sequence[PipelineJob], objective: str = "energy", engine: str = "auto"
+) -> list[PipelineSolution | None]:
     """Generation-batched `solve_pipeline`: every job's per-stage
     envelope columns are stacked into one ragged flat array set and the
     iso-latency grids of the whole batch are swept together with
@@ -635,16 +675,23 @@ def solve_pipeline_batch(jobs: Sequence[PipelineJob],
         if not engine_enabled():
             engine = "hull"
         elif not batch_solve_enabled():
-            engine = "numpy"          # per-genome loop, vectorized path
+            engine = "numpy"  # per-genome loop, vectorized path
             per_genome = True
         else:
             engine = "numpy"
     if per_genome or engine not in ("numpy", "hullvec"):
-        return [solve_pipeline(j.stage_options, j.latencies,
-                               objective=objective,
-                               max_interval=j.max_interval,
-                               max_e2e=j.max_e2e, n_stages=j.n_stages,
-                               engine=engine) for j in jobs]
+        return [
+            solve_pipeline(
+                j.stage_options,
+                j.latencies,
+                objective=objective,
+                max_interval=j.max_interval,
+                max_e2e=j.max_e2e,
+                n_stages=j.n_stages,
+                engine=engine,
+            )
+            for j in jobs
+        ]
     force_sweep = engine == "hullvec"
     weighted = objective.endswith("_cost")
 
@@ -682,8 +729,7 @@ def solve_pipeline_batch(jobs: Sequence[PipelineJob],
         for si, c in enumerate(cols):
             m, q = c[0].size, latv.size
             if force_sweep or m * q >= HULLVEC_MIN_CELLS:
-                rows[(pi, si)] = stage_envelope_sweep(c[0], c[1], c[2],
-                                                      latv)
+                rows[(pi, si)] = stage_envelope_sweep(c[0], c[1], c[2], latv)
                 continue
             if chunk and (chunk_m + m) * max(chunk_q, q) > BATCH_MAX_CELLS:
                 _batch_dense_rows(chunk, prepared, rows)
@@ -704,7 +750,7 @@ def solve_pipeline_batch(jobs: Sequence[PipelineJob],
             continue
         latv, lat, P, cols = prep
         total = np.zeros(len(lat))
-        for si in range(len(cols)):       # per-stage add order preserved
+        for si in range(len(cols)):  # per-stage add order preserved
             total += rows[(pi, si)]
         if objective in ("edp", "edp_cost"):
             total = total * (latv * P)
@@ -715,8 +761,7 @@ def solve_pipeline_batch(jobs: Sequence[PipelineJob],
         best_i[pi] = i
         best_T[pi] = lat[i]
 
-    rec = [(pi, si) for pi in best_T
-           for si in range(len(prepared[pi][3]))]
+    rec = [(pi, si) for pi in best_T for si in range(len(prepared[pi][3]))]
     winners = _batch_recover(rec, prepared, best_T) if rec else {}
 
     out: list[PipelineSolution | None] = []
@@ -726,20 +771,29 @@ def solve_pipeline_batch(jobs: Sequence[PipelineJob],
             continue
         _, lat, P, cols = prep
         T = best_T[pi]
-        stages = [j.stage_options[si][int(cols[si][3][winners[(pi, si)]])]
-                  for si in range(len(cols))]
+        stages = [
+            j.stage_options[si][int(cols[si][3][winners[(pi, si)]])] for si in range(len(cols))
+        ]
         e = sum(o.e_dyn + o.p_static * T for o in stages)
         cost = sum(o.hw_cost_usd for o in stages)
-        out.append(PipelineSolution(
-            objective=objective, value=float(totals[pi][best_i[pi]]),
-            T=T, energy_per_sample=e, delay_e2e=T * P, hw_cost_usd=cost,
-            throughput=1.0 / T, stages=stages))
+        out.append(
+            PipelineSolution(
+                objective=objective,
+                value=float(totals[pi][best_i[pi]]),
+                T=T,
+                energy_per_sample=e,
+                delay_e2e=T * P,
+                hw_cost_usd=cost,
+                throughput=1.0 / T,
+                stages=stages,
+            )
+        )
     return out
 
 
-def solve_pipeline_bruteforce(stage_options, latencies, objective="energy",
-                              max_interval=None, max_e2e=None,
-                              n_stages=None):
+def solve_pipeline_bruteforce(
+    stage_options, latencies, objective="energy", max_interval=None, max_e2e=None, n_stages=None
+):
     """Exponential-in-nothing reference: per-T exhaustive stage scan."""
     P = n_stages if n_stages is not None else len(stage_options)
     lat = sorted(set(latencies))
@@ -770,10 +824,16 @@ def solve_pipeline_bruteforce(stage_options, latencies, objective="energy",
         if best is None or val < best.value:
             e = sum(o.e_dyn + o.p_static * T for o in stages)
             cost = sum(o.hw_cost_usd for o in stages)
-            best = PipelineSolution(objective=objective, value=val, T=T,
-                                    energy_per_sample=e, delay_e2e=T * P,
-                                    hw_cost_usd=cost, throughput=1.0 / T,
-                                    stages=stages)
+            best = PipelineSolution(
+                objective=objective,
+                value=val,
+                T=T,
+                energy_per_sample=e,
+                delay_e2e=T * P,
+                hw_cost_usd=cost,
+                throughput=1.0 / T,
+                stages=stages,
+            )
     return best
 
 
@@ -782,6 +842,7 @@ def solve_pipeline_bruteforce(stage_options, latencies, objective="energy",
 # cached StageOptionSets, so batched and scalar genome evaluations share
 # one grid computation per distinct fusion plan.  Keyed by the sets'
 # process-unique uid tokens (never reused, unlike id()), FIFO-bounded.
+# Single-writer: only the solver loop of one process fills it.
 _GRID_CACHE: dict[tuple, list[float]] = {}
 _GRID_CACHE_MAX = 65536
 
@@ -790,15 +851,15 @@ def clear_grid_cache() -> None:
     _GRID_CACHE.clear()
 
 
-def default_latency_grid(stage_options: Sequence[Sequence[StageOption]],
-                         n: int = 64) -> list[float]:
+def default_latency_grid(
+    stage_options: Sequence[Sequence[StageOption]], n: int = 64
+) -> list[float]:
     """Geometric grid spanning [min feasible T, max useful T].  Includes
     every stage's t_cmp values (the only points where envelopes change
     shape matter beyond grid resolution).  Memoized per option-set key
     when every stage is a StageOptionSet."""
     key = None
-    if stage_options and all(isinstance(o, StageOptionSet)
-                             for o in stage_options):
+    if stage_options and all(isinstance(o, StageOptionSet) for o in stage_options):
         key = (n, *(o.uid for o in stage_options))
         hit = _GRID_CACHE.get(key)
         if hit is not None:

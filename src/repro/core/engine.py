@@ -45,18 +45,19 @@ from __future__ import annotations
 import atexit
 import math
 import multiprocessing
-import os
 import threading
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import astuple
 from typing import TYPE_CHECKING, Sequence
+
+from repro.launch import knobs
 
 if TYPE_CHECKING:   # pragma: no cover - type-only; avoids an import cycle
     from .chiplets import Chiplet
     from .fusion import FusionResult, GAConfig, Requirement
     from .operators import OperatorGraph
 
-_enabled = os.environ.get("MOZART_DISABLE_ENGINE", "0") != "1"
+_enabled = not knobs.get_bool("MOZART_DISABLE_ENGINE")
 
 
 def engine_enabled() -> bool:
@@ -74,25 +75,22 @@ def batch_solve_enabled() -> bool:
     solve (convexhull.solve_pipeline_batch falls back to a per-genome
     loop) — an escape hatch for debugging; results are bit-identical
     either way."""
-    return os.environ.get("MOZART_BATCH_SOLVE", "1") != "0"
+    return knobs.get_bool("MOZART_BATCH_SOLVE")
 
 
 def _default_warmup() -> bool:
-    return os.environ.get("MOZART_WARMUP", "1") != "0"
+    return knobs.get_bool("MOZART_WARMUP")
 
 
 def _default_workers() -> int:
-    try:
-        return int(os.environ.get("MOZART_WORKERS", "0") or 0)
-    except ValueError:
-        return 0
+    return knobs.get_int("MOZART_WORKERS")
 
 
 EXECUTOR_KINDS = ("thread", "process")
 
 
 def _default_executor() -> str:
-    kind = os.environ.get("MOZART_EXECUTOR", "thread").strip().lower()
+    kind = knobs.get_str("MOZART_EXECUTOR").strip().lower()
     return kind if kind in EXECUTOR_KINDS else "thread"
 
 

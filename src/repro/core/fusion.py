@@ -15,6 +15,7 @@ the fusion's stage options.  The initial population is roofline-seeded
 (Insight 1: memory-bound groups get fast memory, compute-bound groups get
 cheap memory) and encodes Alwani-style early-layer fusion patterns.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -27,23 +28,35 @@ import numpy as np
 
 from . import costmodel
 from .chiplets import Chiplet
-from .convexhull import (PipelineJob, PipelineSolution, clear_grid_cache,
-                         default_latency_grid, solve_pipeline,
-                         solve_pipeline_batch)
+from .convexhull import (
+    PipelineJob,
+    PipelineSolution,
+    clear_grid_cache,
+    default_latency_grid,
+    solve_pipeline,
+    solve_pipeline_batch,
+)
 from .memory import DDR5, HBM3, MEMORY_POOL, MemoryType
 from .operators import Operator, OperatorGraph
 from .engine import engine_enabled
-from .perfmodel import (BATCH_OPTIONS, StageOption, StageOptionColumns,
-                        StageOptionSet, config_grid,
-                        enumerate_stage_columns_by_chiplet,
-                        enumerate_stage_options, is_memory_bound,
-                        scale_option)
+from .perfmodel import (
+    BATCH_OPTIONS,
+    StageOption,
+    StageOptionColumns,
+    StageOptionSet,
+    config_grid,
+    enumerate_stage_columns_by_chiplet,
+    enumerate_stage_options,
+    is_memory_bound,
+    scale_option,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class Requirement:
     """Latency requirements (paper Table 5). Seconds; None = unconstrained.
     ttft/tpot/e2e all constrain the end-to-end pipeline traversal P*T."""
+
     ttft: float | None = None
     tpot: float | None = None
     e2e: float | None = None
@@ -58,23 +71,20 @@ class Requirement:
 
     @staticmethod
     def from_dict(d: dict) -> "Requirement":
-        return Requirement(ttft=d.get("ttft"), tpot=d.get("tpot"),
-                           e2e=d.get("e2e"))
+        return Requirement(ttft=d.get("ttft"), tpot=d.get("tpot"), e2e=d.get("e2e"))
 
 
 @dataclasses.dataclass(frozen=True)
 class Genome:
-    boundaries: tuple[int, ...]   # len N-1
-    mem_genes: tuple[int, ...]    # len N, index into MEMORY_POOL
+    boundaries: tuple[int, ...]  # len N-1
+    mem_genes: tuple[int, ...]  # len N, index into MEMORY_POOL
 
     def to_dict(self) -> dict:
-        return {"boundaries": list(self.boundaries),
-                "mem_genes": list(self.mem_genes)}
+        return {"boundaries": list(self.boundaries), "mem_genes": list(self.mem_genes)}
 
     @staticmethod
     def from_dict(d: dict) -> "Genome":
-        return Genome(boundaries=tuple(d["boundaries"]),
-                      mem_genes=tuple(d["mem_genes"]))
+        return Genome(boundaries=tuple(d["boundaries"]), mem_genes=tuple(d["mem_genes"]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,16 +95,21 @@ class FusionGroup:
     name: str
 
     def to_dict(self) -> dict:
-        return {"ops": [o.to_dict() for o in self.ops],
-                "repeat": self.repeat, "memory": self.memory.to_dict(),
-                "name": self.name}
+        return {
+            "ops": [o.to_dict() for o in self.ops],
+            "repeat": self.repeat,
+            "memory": self.memory.to_dict(),
+            "name": self.name,
+        }
 
     @staticmethod
     def from_dict(d: dict) -> "FusionGroup":
         return FusionGroup(
             ops=tuple(Operator.from_dict(o) for o in d["ops"]),
-            repeat=d["repeat"], memory=MemoryType.from_dict(d["memory"]),
-            name=d["name"])
+            repeat=d["repeat"],
+            memory=MemoryType.from_dict(d["memory"]),
+            name=d["name"],
+        )
 
 
 @dataclasses.dataclass
@@ -105,9 +120,12 @@ class FusionResult:
     value: float
 
     def to_dict(self) -> dict:
-        return {"genome": self.genome.to_dict(),
-                "groups": [g.to_dict() for g in self.groups],
-                "solution": self.solution.to_dict(), "value": self.value}
+        return {
+            "genome": self.genome.to_dict(),
+            "groups": [g.to_dict() for g in self.groups],
+            "solution": self.solution.to_dict(),
+            "value": self.value,
+        }
 
     @staticmethod
     def from_dict(d: dict) -> "FusionResult":
@@ -115,12 +133,13 @@ class FusionResult:
             genome=Genome.from_dict(d["genome"]),
             groups=[FusionGroup.from_dict(g) for g in d["groups"]],
             solution=PipelineSolution.from_dict(d["solution"]),
-            value=d["value"])
+            value=d["value"],
+        )
 
 
 @dataclasses.dataclass
 class GAConfig:
-    population: int = 10          # paper Table 4
+    population: int = 10  # paper Table 4
     # Paper Table 4 uses 10 generations; the fixed-seed sweep in
     # benchmarks/bench_budget_scaling.py still finds improvement between
     # 16 and 24 generations (elitism makes the axis monotone), so the
@@ -160,11 +179,16 @@ def groups_from_genome(graph: OperatorGraph, g: Genome) -> list[FusionGroup]:
         last = i == len(ops) - 1
         cut = last or g.boundaries[i] or forced[i]
         if cut:
-            seg = ops[start:i + 1]
+            seg = ops[start : i + 1]
             mem = MEMORY_POOL[g.mem_genes[start] % len(MEMORY_POOL)]
-            groups.append(FusionGroup(
-                ops=tuple(seg), repeat=reps[start],
-                memory=mem, name="+".join(o.name for o in seg)))
+            groups.append(
+                FusionGroup(
+                    ops=tuple(seg),
+                    repeat=reps[start],
+                    memory=mem,
+                    name="+".join(o.name for o in seg),
+                )
+            )
             start = i + 1
     return groups
 
@@ -176,6 +200,8 @@ def groups_from_genome(graph: OperatorGraph, g: Genome) -> list[FusionGroup]:
 # processes sweeping many networks/pools must not grow without bound).
 # Values are StageOptionColumns blocks (column arrays + shared config
 # tuple), the transport unit of the process-pool warmup below.
+# Single-writer: filled from the GA loop of one process (workers hold
+# their own shard); cross-process merges go through the warmup shipment.
 _chiplet_option_cache: dict[tuple, StageOptionColumns] = {}
 _CHIPLET_CACHE_MAX = 500_000
 
@@ -196,39 +222,52 @@ def _chiplet_cache_put(key: tuple, val: StageOptionColumns) -> None:
     _chiplet_option_cache[key] = val
 
 
-def _chiplet_cache_key(ops: tuple[Operator, ...], repeat: int,
-                       chiplet: Chiplet, memory: MemoryType,
-                       fixed_batch: int | None,
-                       batches: tuple[int, ...], name: str) -> tuple:
+def _chiplet_cache_key(
+    ops: tuple[Operator, ...],
+    repeat: int,
+    chiplet: Chiplet,
+    memory: MemoryType,
+    fixed_batch: int | None,
+    batches: tuple[int, ...],
+    name: str,
+) -> tuple:
     return (ops, repeat, chiplet, memory, fixed_batch, batches, name)
 
 
-def _chiplet_group_columns(ops: tuple[Operator, ...], repeat: int,
-                           chiplet: Chiplet, memory: MemoryType,
-                           fixed_batch: int | None,
-                           batches: tuple[int, ...],
-                           name: str) -> StageOptionColumns:
+def _chiplet_group_columns(
+    ops: tuple[Operator, ...],
+    repeat: int,
+    chiplet: Chiplet,
+    memory: MemoryType,
+    fixed_batch: int | None,
+    batches: tuple[int, ...],
+    name: str,
+) -> StageOptionColumns:
     """Option columns for one fusion group on ONE chiplet SKU.  Keyed per
     SKU so a single-SKU pool mutation (the SA neighbor move)
     re-enumerates only the new SKU's options; the other pool members
     come from cache."""
-    key = _chiplet_cache_key(ops, repeat, chiplet, memory, fixed_batch,
-                             batches, name)
+    key = _chiplet_cache_key(ops, repeat, chiplet, memory, fixed_batch, batches, name)
     got = _chiplet_option_cache.get(key)
     if got is None:
         _warmup_stats["enumerated"] += 1
         got = enumerate_stage_columns_by_chiplet(
-            ops, (chiplet,), memories=(memory,), batches=batches, name=name,
-            fixed_batch=fixed_batch, cost_fn=costmodel.stage_hw_cost,
-            repeat=repeat)[chiplet]
+            ops,
+            (chiplet,),
+            memories=(memory,),
+            batches=batches,
+            name=name,
+            fixed_batch=fixed_batch,
+            cost_fn=costmodel.stage_hw_cost,
+            repeat=repeat,
+        )[chiplet]
         _chiplet_cache_put(key, got)
     return got
 
 
-def prefetch_population_options(graph: OperatorGraph,
-                                genomes: Sequence[Genome],
-                                pool: Sequence[Chiplet],
-                                cfg: GAConfig) -> None:
+def prefetch_population_options(
+    graph: OperatorGraph, genomes: Sequence[Genome], pool: Sequence[Chiplet], cfg: GAConfig
+) -> None:
     """Population-batched option enumeration (the Layer-2 vectorization).
 
     Decodes every genome of a GA population, collects the distinct fusion
@@ -242,13 +281,13 @@ def prefetch_population_options(graph: OperatorGraph,
     if not engine_enabled():
         return
     _prefetch_group_options(
-        (gr for g in genomes for gr in groups_from_genome(graph, g)),
-        pool, cfg)
+        (gr for g in genomes for gr in groups_from_genome(graph, g)), pool, cfg
+    )
 
 
-def _prefetch_group_options(groups: "Iterable[FusionGroup]",
-                            pool: Sequence[Chiplet],
-                            cfg: GAConfig) -> None:
+def _prefetch_group_options(
+    groups: "Iterable[FusionGroup]", pool: Sequence[Chiplet], cfg: GAConfig
+) -> None:
     """Group-level core of the population prefetch: one batched-columns
     evaluation per distinct group covering all its missing SKUs."""
     batches = tuple(cfg.batches)
@@ -260,38 +299,54 @@ def _prefetch_group_options(groups: "Iterable[FusionGroup]",
         if gkey in seen:
             continue
         seen.add(gkey)
-        missing = [c for c in skus if _chiplet_cache_key(
-            gr.ops, gr.repeat, c, gr.memory, cfg.fixed_batch, batches,
-            gr.name) not in _chiplet_option_cache]
+        missing = [
+            c
+            for c in skus
+            if _chiplet_cache_key(
+                gr.ops, gr.repeat, c, gr.memory, cfg.fixed_batch, batches, gr.name
+            )
+            not in _chiplet_option_cache
+        ]
         if not missing:
             continue
         _warmup_stats["enumerated"] += len(missing)
         grouped = enumerate_stage_columns_by_chiplet(
-            gr.ops, tuple(missing), memories=(gr.memory,),
-            batches=batches, name=gr.name, fixed_batch=cfg.fixed_batch,
-            cost_fn=costmodel.stage_hw_cost, repeat=gr.repeat)
+            gr.ops,
+            tuple(missing),
+            memories=(gr.memory,),
+            batches=batches,
+            name=gr.name,
+            fixed_batch=cfg.fixed_batch,
+            cost_fn=costmodel.stage_hw_cost,
+            repeat=gr.repeat,
+        )
         for c, block in grouped.items():
-            _chiplet_cache_put(_chiplet_cache_key(
-                gr.ops, gr.repeat, c, gr.memory, cfg.fixed_batch,
-                batches, gr.name), block)
+            _chiplet_cache_put(
+                _chiplet_cache_key(
+                    gr.ops, gr.repeat, c, gr.memory, cfg.fixed_batch, batches, gr.name
+                ),
+                block,
+            )
 
 
 # --- shared option-cache transport (process-pool warmup) --------------------
 
-def matching_option_keys(pool: Sequence[Chiplet],
-                         cfg: GAConfig) -> list[tuple]:
+
+def matching_option_keys(pool: Sequence[Chiplet], cfg: GAConfig) -> list[tuple]:
     """Cache keys shippable to a worker evaluating `pool` under `cfg`:
     the entry's SKU is in the pool and its batch axis matches the GA
     config (the group axis is deliberately unfiltered — any group a
     worker encounters again is worth having)."""
     skus = set(pool)
     batches = tuple(cfg.batches)
-    return [k for k in _chiplet_option_cache
-            if k[2] in skus and k[4] == cfg.fixed_batch and k[5] == batches]
+    return [
+        k
+        for k in _chiplet_option_cache
+        if k[2] in skus and k[4] == cfg.fixed_batch and k[5] == batches
+    ]
 
 
-def export_option_columns(keys: Sequence[tuple]
-                          ) -> tuple[list[dict], np.ndarray]:
+def export_option_columns(keys: Sequence[tuple]) -> tuple[list[dict], np.ndarray]:
     """Pack cached (group, SKU) blocks for transport: one flat float64
     matrix with rows (t_cmp, e_dyn, p_static, hw_cost) and a metadata
     list carrying each block's cache key and row span.  The matrix is
@@ -305,15 +360,13 @@ def export_option_columns(keys: Sequence[tuple]
         if block is None:
             continue
         n = len(block)
-        meta.append({"key": key, "off": off, "n": n,
-                     "flops": block.flops_per_sample})
+        meta.append({"key": key, "off": off, "n": n, "flops": block.flops_per_sample})
         if n:
-            parts.append(np.stack([block.t_cmp, block.e_dyn,
-                                   block.p_static, block.hw_cost_usd],
-                                  axis=1))
+            parts.append(
+                np.stack([block.t_cmp, block.e_dyn, block.p_static, block.hw_cost_usd], axis=1)
+            )
         off += n
-    matrix = (np.concatenate(parts, axis=0) if parts
-              else np.empty((0, 4), dtype=np.float64))
+    matrix = np.concatenate(parts, axis=0) if parts else np.empty((0, 4), dtype=np.float64)
     return meta, matrix
 
 
@@ -330,38 +383,55 @@ def import_option_columns(meta: Sequence[dict], matrix: np.ndarray) -> int:
         if key in _chiplet_option_cache:
             continue
         ops, repeat, chiplet, memory, fixed_batch, batches, name = key
-        grid = config_grid(ops, (chiplet,), memories=(memory,),
-                           batches=batches, fixed_batch=fixed_batch)
-        if len(grid.cfgs) != e["n"]:    # sender/receiver model drift
+        grid = config_grid(
+            ops, (chiplet,), memories=(memory,), batches=batches, fixed_batch=fixed_batch
+        )
+        if len(grid.cfgs) != e["n"]:  # sender/receiver model drift
             continue
-        rows = matrix[e["off"]:e["off"] + e["n"]]
-        _chiplet_cache_put(key, StageOptionColumns(
-            t_cmp=np.ascontiguousarray(rows[:, 0]),
-            e_dyn=np.ascontiguousarray(rows[:, 1]),
-            p_static=np.ascontiguousarray(rows[:, 2]),
-            hw_cost_usd=np.ascontiguousarray(rows[:, 3]),
-            cfgs=grid.cfgs, group_name=name,
-            flops_per_sample=e["flops"], repeat=repeat))
+        rows = matrix[e["off"] : e["off"] + e["n"]]
+        _chiplet_cache_put(
+            key,
+            StageOptionColumns(
+                t_cmp=np.ascontiguousarray(rows[:, 0]),
+                e_dyn=np.ascontiguousarray(rows[:, 1]),
+                p_static=np.ascontiguousarray(rows[:, 2]),
+                hw_cost_usd=np.ascontiguousarray(rows[:, 3]),
+                cfgs=grid.cfgs,
+                group_name=name,
+                flops_per_sample=e["flops"],
+                repeat=repeat,
+            ),
+        )
         installed += 1
     _warmup_stats["installed"] += installed
     return installed
 
 
 @functools.lru_cache(maxsize=200_000)
-def _group_options_cached(ops: tuple[Operator, ...], repeat: int,
-                          pool: tuple[Chiplet, ...], memory: MemoryType,
-                          fixed_batch: int | None,
-                          batches: tuple[int, ...],
-                          name: str) -> StageOptionSet:
+def _group_options_cached(
+    ops: tuple[Operator, ...],
+    repeat: int,
+    pool: tuple[Chiplet, ...],
+    memory: MemoryType,
+    fixed_batch: int | None,
+    batches: tuple[int, ...],
+    name: str,
+) -> StageOptionSet:
     if engine_enabled():
         out = StageOptionSet.from_blocks(
-            _chiplet_group_columns(ops, repeat, c, memory, fixed_batch,
-                                   batches, name) for c in pool)
-        out.columns()        # build once, reused by every genome eval
+            _chiplet_group_columns(ops, repeat, c, memory, fixed_batch, batches, name) for c in pool
+        )
+        out.columns()  # build once, reused by every genome eval
         return out
-    raw = enumerate_stage_options(ops, pool, memories=(memory,),
-                                  batches=batches, name=name,
-                                  fixed_batch=fixed_batch, vectorize=False)
+    raw = enumerate_stage_options(
+        ops,
+        pool,
+        memories=(memory,),
+        batches=batches,
+        name=name,
+        fixed_batch=fixed_batch,
+        vectorize=False,
+    )
     priced = costmodel.price_stage_options(raw)
     return StageOptionSet(scale_option(o, repeat) for o in priced)
 
@@ -374,20 +444,26 @@ def clear_option_caches() -> None:
     _warmup_stats["enumerated"] = 0
 
 
-def stage_options_for_groups(groups: Sequence[FusionGroup],
-                             pool: Sequence[Chiplet],
-                             cfg: GAConfig) -> list[StageOptionSet]:
-    return [_group_options_cached(g.ops, g.repeat, tuple(pool),
-                                  g.memory, cfg.fixed_batch,
-                                  tuple(cfg.batches), g.name)
-            for g in groups]
+def stage_options_for_groups(
+    groups: Sequence[FusionGroup], pool: Sequence[Chiplet], cfg: GAConfig
+) -> list[StageOptionSet]:
+    return [
+        _group_options_cached(
+            g.ops, g.repeat, tuple(pool), g.memory, cfg.fixed_batch, tuple(cfg.batches), g.name
+        )
+        for g in groups
+    ]
 
 
-def evaluate_genome(graph: OperatorGraph, genome: Genome,
-                    pool: Sequence[Chiplet], objective: str,
-                    req: Requirement, cfg: GAConfig,
-                    _solution_cache: dict | None = None
-                    ) -> FusionResult | None:
+def evaluate_genome(
+    graph: OperatorGraph,
+    genome: Genome,
+    pool: Sequence[Chiplet],
+    objective: str,
+    req: Requirement,
+    cfg: GAConfig,
+    _solution_cache: dict | None = None,
+) -> FusionResult | None:
     groups = groups_from_genome(graph, genome)
     # Memory genes of non-leading ops are silent (§4.2): distinct genomes
     # can decode to identical fusion groups.  Collapse them onto one
@@ -397,8 +473,7 @@ def evaluate_genome(graph: OperatorGraph, genome: Genome,
         sol = _solution_cache[key]
         if sol is None:
             return None
-        return FusionResult(genome=genome, groups=groups, solution=sol,
-                            value=sol.value)
+        return FusionResult(genome=genome, groups=groups, solution=sol, value=sol.value)
     options = stage_options_for_groups(groups, pool, cfg)
     if any(not o for o in options):
         if key is not None:
@@ -406,21 +481,23 @@ def evaluate_genome(graph: OperatorGraph, genome: Genome,
         return None
     grid = default_latency_grid(options, n=cfg.latency_points)
     n_stages = sum(g.repeat for g in groups)
-    sol = solve_pipeline(options, grid, objective=objective,
-                         max_e2e=req.max_e2e, n_stages=n_stages)
+    sol = solve_pipeline(options, grid, objective=objective, max_e2e=req.max_e2e, n_stages=n_stages)
     if key is not None:
         _solution_cache[key] = sol
     if sol is None:
         return None
-    return FusionResult(genome=genome, groups=groups, solution=sol,
-                        value=sol.value)
+    return FusionResult(genome=genome, groups=groups, solution=sol, value=sol.value)
 
 
-def evaluate_genomes(graph: OperatorGraph, genomes: Sequence[Genome],
-                     pool: Sequence[Chiplet], objective: str,
-                     req: Requirement, cfg: GAConfig,
-                     _solution_cache: dict
-                     ) -> dict[Genome, FusionResult | None]:
+def evaluate_genomes(
+    graph: OperatorGraph,
+    genomes: Sequence[Genome],
+    pool: Sequence[Chiplet],
+    objective: str,
+    req: Requirement,
+    cfg: GAConfig,
+    _solution_cache: dict,
+) -> dict[Genome, FusionResult | None]:
     """Generation-batched Layer-3: one `solve_pipeline_batch` call for a
     whole GA generation instead of a Python loop of per-genome
     `solve_pipeline` calls.
@@ -437,8 +514,7 @@ def evaluate_genomes(graph: OperatorGraph, genomes: Sequence[Genome],
         groups = groups_from_genome(graph, g)
         decoded.append((g, groups, tuple(groups)))
     if engine_enabled():
-        _prefetch_group_options((gr for _, groups, _ in decoded
-                                 for gr in groups), pool, cfg)
+        _prefetch_group_options((gr for _, groups, _ in decoded for gr in groups), pool, cfg)
     jobs: list[PipelineJob] = []
     job_keys: list[tuple] = []
     queued: set[tuple] = set()
@@ -451,8 +527,11 @@ def evaluate_genomes(graph: OperatorGraph, genomes: Sequence[Genome],
             continue
         queued.add(key)
         grid = default_latency_grid(options, n=cfg.latency_points)
-        jobs.append(PipelineJob(options, grid, max_e2e=req.max_e2e,
-                                n_stages=sum(gr.repeat for gr in groups)))
+        jobs.append(
+            PipelineJob(
+                options, grid, max_e2e=req.max_e2e, n_stages=sum(gr.repeat for gr in groups)
+            )
+        )
         job_keys.append(key)
     if jobs:
         sols = solve_pipeline_batch(jobs, objective=objective)
@@ -461,15 +540,18 @@ def evaluate_genomes(graph: OperatorGraph, genomes: Sequence[Genome],
     out: dict[Genome, FusionResult | None] = {}
     for g, groups, key in decoded:
         sol = _solution_cache[key]
-        out[g] = None if sol is None else FusionResult(
-            genome=g, groups=groups, solution=sol, value=sol.value)
+        out[g] = (
+            None
+            if sol is None
+            else FusionResult(genome=g, groups=groups, solution=sol, value=sol.value)
+        )
     return out
 
 
 # --- seeding ----------------------------------------------------------------
 
-def _roofline_seed(graph: OperatorGraph, pool: Sequence[Chiplet],
-                   fuse: bool) -> Genome:
+
+def _roofline_seed(graph: OperatorGraph, pool: Sequence[Chiplet], fuse: bool) -> Genome:
     """Insight-1 seed: group while intermediates fit the biggest GLB; give
     memory-bound groups HBM, compute-bound groups DDR5."""
     ops, reps = graph.operators, graph.repeats
@@ -485,8 +567,7 @@ def _roofline_seed(graph: OperatorGraph, pool: Sequence[Chiplet],
             bounds.append(1 if (forced[i] or spill) else 0)
     hbm_i = MEMORY_POOL.index(HBM3)
     ddr_i = MEMORY_POOL.index(DDR5)
-    genes = [hbm_i if is_memory_bound(o, ref_chiplet, HBM3) else ddr_i
-             for o in ops]
+    genes = [hbm_i if is_memory_bound(o, ref_chiplet, HBM3) else ddr_i for o in ops]
     return Genome(boundaries=tuple(bounds), mem_genes=tuple(genes))
 
 
@@ -507,13 +588,14 @@ def _crossover(a: Genome, b: Genome, rng: random.Random) -> Genome:
     if len(a.boundaries) == 0:
         return a
     cut = rng.randrange(len(a.boundaries) + 1)
-    return Genome(a.boundaries[:cut] + b.boundaries[cut:],
-                  a.mem_genes[:cut + 1] + b.mem_genes[cut + 1:])
+    return Genome(
+        a.boundaries[:cut] + b.boundaries[cut:], a.mem_genes[: cut + 1] + b.mem_genes[cut + 1 :]
+    )
 
 
-def initial_population(graph: OperatorGraph, pool: Sequence[Chiplet],
-                       cfg: GAConfig,
-                       rng: random.Random | None = None) -> list[Genome]:
+def initial_population(
+    graph: OperatorGraph, pool: Sequence[Chiplet], cfg: GAConfig, rng: random.Random | None = None
+) -> list[Genome]:
     """The GA's deterministic generation-0 population: the two roofline
     seeds plus seeded mutations of the fused seed.  Factored out so the
     process-pool warmup can decode the exact genomes a worker's GA will
@@ -521,18 +603,20 @@ def initial_population(graph: OperatorGraph, pool: Sequence[Chiplet],
     (by `optimize_fusion`), its state advances exactly as the inlined
     seeding loop used to, preserving fixed-seed GA trajectories."""
     rng = rng if rng is not None else random.Random(cfg.seed)
-    seeds = [_roofline_seed(graph, pool, fuse=True),
-             _roofline_seed(graph, pool, fuse=False)]
+    seeds = [_roofline_seed(graph, pool, fuse=True), _roofline_seed(graph, pool, fuse=False)]
     pop: list[Genome] = list(seeds)
     while len(pop) < cfg.population:
         pop.append(_mutate(seeds[0], rng, 0.3))
     return pop
 
 
-def optimize_fusion(graph: OperatorGraph, pool: Sequence[Chiplet],
-                    objective: str = "energy",
-                    req: Requirement | None = None,
-                    cfg: GAConfig | None = None) -> FusionResult | None:
+def optimize_fusion(
+    graph: OperatorGraph,
+    pool: Sequence[Chiplet],
+    objective: str = "energy",
+    req: Requirement | None = None,
+    cfg: GAConfig | None = None,
+) -> FusionResult | None:
     """The full Layer-2 GA.  Returns the best feasible FusionResult."""
     req = req if req is not None else Requirement()
     cfg = cfg if cfg is not None else GAConfig()
@@ -546,8 +630,9 @@ def optimize_fusion(graph: OperatorGraph, pool: Sequence[Chiplet],
 
     def fit(g: Genome) -> float:
         if g not in cache:
-            cache[g] = evaluate_genome(graph, g, pool, objective, req, cfg,
-                                       _solution_cache=solution_cache)
+            cache[g] = evaluate_genome(
+                graph, g, pool, objective, req, cfg, _solution_cache=solution_cache
+            )
         r = cache[g]
         return math.inf if r is None else r.value
 
@@ -564,8 +649,7 @@ def optimize_fusion(graph: OperatorGraph, pool: Sequence[Chiplet],
         if solution_cache is not None:
             # evaluate_genomes prefetches options for the decoded groups
             # itself (one decode pass shared with the solve batch).
-            cache.update(evaluate_genomes(graph, todo, pool, objective,
-                                          req, cfg, solution_cache))
+            cache.update(evaluate_genomes(graph, todo, pool, objective, req, cfg, solution_cache))
         else:
             for g in todo:
                 fit(g)
@@ -577,14 +661,13 @@ def optimize_fusion(graph: OperatorGraph, pool: Sequence[Chiplet],
         nxt = list(elite)
         while len(nxt) < cfg.population:
             if rng.random() < cfg.crossover_rate and len(scored) >= 2:
-                child = _crossover(rng.choice(scored[:5]),
-                                   rng.choice(scored[:5]), rng)
+                child = _crossover(rng.choice(scored[:5]), rng.choice(scored[:5]), rng)
             else:
                 child = rng.choice(elite)
             nxt.append(_mutate(child, rng, cfg.mutation_rate))
         pop = nxt
 
-    batch_eval(pop)                       # final generation's children
+    batch_eval(pop)  # final generation's children
     best = min(pop, key=fit)
     res = cache.get(best)
     if res is None:

@@ -38,6 +38,9 @@ class Placement:
     def center(self) -> tuple[float, float]:
         return (self.x + self.w / 2, self.y + self.h / 2)
 
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
     @staticmethod
     def from_dict(d: dict) -> "Placement":
         return Placement(**d)

@@ -48,7 +48,8 @@ class Scenario:
     def to_dict(self) -> dict:
         return {"kind": "basic", "name": self.name, "metric": self.metric,
                 "requirement": self.requirement.to_dict(),
-                "description": self.description}
+                "description": self.description,
+                "roles": list(self.roles)}
 
     @staticmethod
     def from_dict(d: dict) -> "Scenario":
@@ -58,11 +59,13 @@ class Scenario:
             return SpecDecodeScenario(
                 name=d["name"], metric=d["metric"], requirement=req,
                 description=d.get("description", ""),
+                roles=tuple(d.get("roles", ("draft", "target"))),
                 tar=d.get("tar", SPECDEC_TAR), k=d.get("k", SPECDEC_K),
                 speedup_cap=d.get("speedup_cap", SPECDEC_SPEEDUP_CAP))
         return Scenario(name=d["name"], metric=d["metric"],
                         requirement=req,
-                        description=d.get("description", ""))
+                        description=d.get("description", ""),
+                        roles=tuple(d.get("roles", ())))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,8 +9,8 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def attention_ref(q, k, v, *, causal: bool = True,
-                  window: int | None = None) -> jnp.ndarray:
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None) -> jnp.ndarray:
     """q: (BH, Sq, hd); k/v: (BHkv, Sk, hd). GQA via head-group repeat."""
     bh, sq, hd = q.shape
     bh_kv, sk, _ = k.shape
@@ -31,3 +31,7 @@ def attention_ref(q, k, v, *, causal: bool = True,
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)) \
         .astype(q.dtype)
+
+
+# pre-PR-6 name, kept importable
+attention_ref = flash_attention_ref

@@ -6,12 +6,17 @@ import jax
 import jax.numpy as jnp
 
 
-def rmsnorm_ref(x, scale, *, eps: float = 1e-6):
+def fused_rmsnorm_ref(x, scale, *, eps: float = 1e-6):
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
     y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
     return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
 
 
-def rmsnorm_residual_ref(x, res, scale, *, eps: float = 1e-6):
+def fused_rmsnorm_residual_ref(x, res, scale, *, eps: float = 1e-6):
     s = x + res
-    return s, rmsnorm_ref(s, scale, eps=eps)
+    return s, fused_rmsnorm_ref(s, scale, eps=eps)
+
+
+# pre-PR-6 names, kept importable
+rmsnorm_ref = fused_rmsnorm_ref
+rmsnorm_residual_ref = fused_rmsnorm_residual_ref

@@ -1,0 +1,97 @@
+"""Central registry of `MOZART_*` environment knobs.
+
+Every env knob the repo reads is declared here with its type, default,
+and one-line doc; `tools/mozart_check` (MZC05) fails CI when a
+`MOZART_*` read appears outside this registry or when the README table
+drifts from it (regenerate the table with
+``python -m tools.mozart_check --knob-table``).
+
+This module depends only on the standard library so any layer (core,
+serving, launch) can import it without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class Knob:
+    """One environment knob: `type` is "bool" / "int" / "str" (bool knobs
+    treat "0"/""/"false"/"no"/"off" as false, anything else as true)."""
+
+    name: str
+    type: str
+    default: str
+    doc: str
+
+
+KNOBS: tuple[Knob, ...] = (
+    Knob(
+        name="MOZART_DISABLE_ENGINE",
+        type="bool",
+        default="0",
+        doc="set to 1 to restore the seed's scalar, uncached evaluation behavior exactly",
+    ),
+    Knob(
+        name="MOZART_WORKERS",
+        type="int",
+        default="0",
+        doc="per-network evaluation fan-out width (0 = serial)",
+    ),
+    Knob(
+        name="MOZART_EXECUTOR",
+        type="str",
+        default="thread",
+        doc="worker kind for the evaluation fan-out: `thread` or `process` (spawn-safe pool)",
+    ),
+    Knob(
+        name="MOZART_WARMUP",
+        type="bool",
+        default="1",
+        doc="set to 0 to disable the pre-fork shared option-cache warmup",
+    ),
+    Knob(
+        name="MOZART_BATCH_SOLVE",
+        type="bool",
+        default="1",
+        doc="set to 0 for the per-genome Layer-3 loop instead of the generation batch",
+    ),
+    Knob(
+        name="MOZART_COMPACT_DECODE",
+        type="bool",
+        default="1",
+        doc="set to 0 for the serving engine's full-width schedule emulation instead of "
+        "the compacted sub-batch decode",
+    ),
+)
+
+_BY_NAME = {k.name: k for k in KNOBS}
+_FALSY = ("0", "", "false", "no", "off")
+
+
+def knob(name: str) -> Knob:
+    """The registry entry for `name` (KeyError on unregistered knobs)."""
+    return _BY_NAME[name]
+
+
+def get_raw(name: str) -> str:
+    """The raw env value, falling back to the registered default."""
+    return os.environ.get(name, _BY_NAME[name].default)
+
+
+def get_bool(name: str) -> bool:
+    return get_raw(name).strip().lower() not in _FALSY
+
+
+def get_int(name: str) -> int:
+    k = _BY_NAME[name]
+    try:
+        return int(get_raw(name).strip() or k.default)
+    except ValueError:
+        return int(k.default)
+
+
+def get_str(name: str) -> str:
+    return get_raw(name)

@@ -147,8 +147,10 @@ def main() -> None:
             raise SystemExit("specdec demo targets transformer archs")
         dcfg = mcfg.replace(n_layers=max(1, mcfg.n_layers // 4))
         dparams = api.init_params(dcfg, jax.random.PRNGKey(1))
-        tf = jax.jit(lambda t: transformer.forward(mcfg, params, t))
-        df = jax.jit(lambda t: transformer.forward(dcfg, dparams, t))
+        # one-shot CLI demo: the jitted pair lives for exactly one
+        # spec-decode run, so per-call construction cannot re-trace
+        tf = jax.jit(lambda t: transformer.forward(mcfg, params, t))  # mzc: ignore[MZC013]
+        df = jax.jit(lambda t: transformer.forward(dcfg, dparams, t))  # mzc: ignore[MZC013]
         prompt = rng.integers(0, mcfg.vocab, size=12).astype(np.int32)
         t0 = time.time()
         out, stats = spec_decode_greedy(tf, df, prompt, k=args.k,

@@ -28,13 +28,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import os
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch import knobs
 from repro.models import api
 from repro.models.config import ModelConfig
 from .sampling import sample
@@ -128,7 +128,7 @@ class ServingEngine:
         # per step, in slot-id rotation, over a compacted sub-cache.
         self.decode_batch = decode_batch or max_batch
         if compact is None:
-            compact = os.environ.get("MOZART_COMPACT_DECODE", "1") != "0"
+            compact = knobs.get_bool("MOZART_COMPACT_DECODE")
         # the gather/scatter helpers know the transformer cache layout
         # ({"segments": [(L, B, C, ...)], "index": (B,)}); other families
         # ({"layers": [(B, ...)]}) fall back to the schedule emulation

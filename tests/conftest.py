@@ -1,8 +1,13 @@
 """Shared test plumbing: a lightweight per-test --timeout (SIGALRM-based,
-no pytest-timeout dependency needed)."""
+no pytest-timeout dependency needed) and the repo root on sys.path so
+tests can import the tools.mozart_check package."""
+import os
 import signal
+import sys
 
 import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 _own_timeout_option = False
 

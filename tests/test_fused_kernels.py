@@ -11,7 +11,7 @@ import pytest
 from repro.kernels.fused_mlp.ops import fused_mlp
 from repro.kernels.fused_mlp.ref import fused_mlp_ref
 from repro.kernels.fused_norm.ops import fused_rmsnorm, fused_rmsnorm_residual
-from repro.kernels.fused_norm.ref import rmsnorm_ref, rmsnorm_residual_ref
+from repro.kernels.fused_norm.ref import fused_rmsnorm_ref, fused_rmsnorm_residual_ref
 from repro.models import api
 from repro.models.config import ModelConfig
 
@@ -66,12 +66,12 @@ def test_fused_rmsnorm_matches_ref(n, d, dt, tol):
     res = jax.random.normal(ks[1], (2, n, d), dt)
     scale = jax.random.normal(ks[2], (d,), dt)
     out = fused_rmsnorm(x, scale, bt=4)
-    ref = rmsnorm_ref(x, scale)
+    ref = fused_rmsnorm_ref(x, scale)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
     )
     s, y = fused_rmsnorm_residual(x, res, scale, bt=4)
-    s_ref, y_ref = rmsnorm_residual_ref(x, res, scale)
+    s_ref, y_ref = fused_rmsnorm_residual_ref(x, res, scale)
     np.testing.assert_allclose(
         np.asarray(s, np.float32), np.asarray(s_ref, np.float32), rtol=tol, atol=tol
     )

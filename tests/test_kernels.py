@@ -9,7 +9,7 @@ from _hypothesis_compat import given, settings, st
 pytestmark = pytest.mark.slow   # multi-minute JAX compile/run; excluded from tier-1
 
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.moe_mlp.ops import moe_mlp
 from repro.kernels.moe_mlp.ref import moe_mlp_ref
 from repro.kernels.rglru_scan.ops import rglru_scan
@@ -28,7 +28,7 @@ def _flash_case(B, Sq, Sk, H, Hkv, hd, causal, window, dt, bq=32, bk=32):
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
     kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
     vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
-    ref = attention_ref(qf, kf, vf, causal=causal, window=window) \
+    ref = flash_attention_ref(qf, kf, vf, causal=causal, window=window) \
         .reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
     tol = 2.5e-2 if dt == jnp.bfloat16 else 3e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),

@@ -1,0 +1,182 @@
+"""Analyzer self-tests: every MZC code fires exactly once on its
+known-bad fixture, suppression comments work at code / family / bare
+granularity, the shipped tree is self-clean, and the tracecheck runtime
+counter sees fresh compiles but not cache hits."""
+
+from pathlib import Path
+
+import pytest
+
+from tools.mozart_check import ALL_CHECKERS, run_checkers
+
+REPO = Path(__file__).resolve().parents[1]
+
+# Minimal pallas_call boilerplate shared by the MZC02x kernel fixtures;
+# the checker parses ASTs, so nothing here is ever imported or executed.
+_KERNEL_HEADER = (
+    "import jax.numpy as jnp\n"
+    "from jax.experimental import pallas as pl\n"
+    "from jax.experimental.pallas import tpu as pltpu\n\n\n"
+)
+
+MZC011_SRC = """import jax
+
+
+@jax.jit
+def f(x):
+    if x > 0:
+        return x
+    return -x
+"""
+
+# fixture name -> {relative path: source}; each must yield EXACTLY one
+# finding, of the code the fixture is named after
+CASES = {
+    "MZC011": {"fix.py": MZC011_SRC},
+    "MZC012": {
+        "fix.py": "import jax\n\n\n@jax.jit\ndef f(x):\n    return int(x)\n",
+    },
+    "MZC013": {
+        "fix.py": "import jax\n\n\ndef make(fn):\n    return jax.jit(fn)\n",
+    },
+    "MZC021": {
+        "kernels/foo/kernel.py": _KERNEL_HEADER
+        + "def run(x):\n"
+        + "    return pl.pallas_call(\n"
+        + "        kern,\n"
+        + "        grid=(4, 4),\n"
+        + "        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],\n"
+        + "        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, 0)),\n"
+        + "    )(x)\n",
+        "kernels/foo/ops.py": "",
+        "kernels/foo/ref.py": "",
+    },
+    "MZC022": {
+        "kernels/foo/kernel.py": _KERNEL_HEADER
+        + "def run(x):\n"
+        + "    return pl.pallas_call(\n"
+        + "        kern,\n"
+        + "        grid=(4, 4),\n"
+        + "        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, 0, 0))],\n"
+        + "        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, 0)),\n"
+        + "    )(x)\n",
+        "kernels/foo/ops.py": "",
+        "kernels/foo/ref.py": "",
+    },
+    "MZC023": {
+        "kernels/foo/kernel.py": _KERNEL_HEADER
+        + "def run(x):\n"
+        + "    return pl.pallas_call(\n"
+        + "        kern,\n"
+        + "        grid=(4,),\n"
+        + "        scratch_shapes=[pltpu.VMEM((8, 8), jnp.bfloat16)],\n"
+        + "    )(x)\n",
+        "kernels/foo/ops.py": "",
+        "kernels/foo/ref.py": "",
+    },
+    "MZC024": {
+        "kernels/bar/kernel.py": "def run(x):\n    return x\n",
+        "kernels/bar/ops.py": "def foo(x):\n    return x\n",
+        "kernels/bar/ref.py": "",
+    },
+    "MZC031": {
+        "fix.py": "import dataclasses\n\n\n"
+        "@dataclasses.dataclass\n"
+        "class A:\n"
+        "    x: int = 0\n\n"
+        "    def to_dict(self):\n"
+        '        return {"x": self.x}\n',
+    },
+    "MZC032": {
+        "fix.py": "import dataclasses\n\n\n"
+        "@dataclasses.dataclass\n"
+        "class B:\n"
+        "    x: int = 0\n"
+        "    y: int = 0\n\n"
+        "    def to_dict(self):\n"
+        '        return {"x": self.x, "y": self.y}\n\n'
+        "    @staticmethod\n"
+        "    def from_dict(d):\n"
+        '        return B(x=d["x"])\n',
+    },
+    "MZC041": {
+        "fix.py": "def f(x, acc=[]):\n    acc.append(x)\n    return acc\n",
+    },
+    "MZC042": {
+        "fix.py": "CACHE = {}\n",
+    },
+    "MZC051": {
+        "fix.py": 'import os\n\nFLAG = os.environ.get("MOZART_FIXTURE", "0")\n',
+    },
+    "MZC052": {
+        "launch/knobs.py": "KNOBS = (\n"
+        '    Knob(name="MOZART_X", type="bool", default="1", doc="a knob"),\n'
+        ")\n",
+        "README.md": "# fixture readme with no knob table\n",
+    },
+    "MZC053": {
+        "launch/knobs.py": "KNOBS = (\n"
+        '    Knob(name="MOZART_Y", type="int", default="0"),\n'
+        ")\n",
+    },
+}
+
+
+def _materialize(tmp_path, files):
+    for rel, content in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content)
+
+
+def _run(tmp_path):
+    return run_checkers([str(tmp_path)], ALL_CHECKERS, root=str(tmp_path))
+
+
+@pytest.mark.parametrize("code", sorted(CASES))
+def test_fixture_fires_exactly_once(tmp_path, code):
+    _materialize(tmp_path, CASES[code])
+    findings = _run(tmp_path)
+    assert [f.code for f in findings] == [code], [f.render() for f in findings]
+
+
+@pytest.mark.parametrize(
+    "marker",
+    ["# mzc: ignore[MZC011]", "# mzc: ignore[MZC01]", "# mzc: ignore"],
+)
+def test_suppression_comment_silences_the_line(tmp_path, marker):
+    _materialize(
+        tmp_path, {"fix.py": MZC011_SRC.replace("if x > 0:", f"if x > 0:  {marker}")}
+    )
+    assert _run(tmp_path) == []
+
+
+def test_suppression_for_other_code_does_not_apply(tmp_path):
+    src = MZC011_SRC.replace("if x > 0:", "if x > 0:  # mzc: ignore[MZC02]")
+    _materialize(tmp_path, {"fix.py": src})
+    assert [f.code for f in _run(tmp_path)] == ["MZC011"]
+
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    _materialize(tmp_path, {"fix.py": "def broken(:\n"})
+    assert [f.code for f in _run(tmp_path)] == ["MZC000"]
+
+
+def test_tree_is_self_clean():
+    findings = run_checkers([str(REPO / "src")], ALL_CHECKERS, root=str(REPO))
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_compile_monitor_counts_fresh_compiles_only():
+    import jax
+    import jax.numpy as jnp
+
+    from tools.mozart_check.tracecheck import CompileMonitor
+
+    f = jax.jit(lambda x: x * 2 + 1)
+    with CompileMonitor() as cold:
+        f(jnp.ones((3,)))
+    with CompileMonitor() as warm:
+        f(jnp.ones((3,)))
+    assert cold.count >= 1
+    assert warm.count == 0, warm.events

@@ -195,6 +195,44 @@ def test_gather_scatter_roundtrip():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_steady_state_serving_does_not_recompile():
+    """tracecheck (the runtime half of MZC01): after one warm-up run,
+    compacted decode steps and prefills of an already-seen prompt length
+    build 0 new XLA executables — the static shapes really are static."""
+    from tools.mozart_check.tracecheck import CompileMonitor
+
+    params = api.init_params(TINY, jax.random.PRNGKey(0))
+
+    def drive(n_reqs):
+        eng = ServingEngine(
+            TINY, params, max_batch=4, max_len=32, decode_batch=2, compact=True
+        )
+        reqs = [
+            Request(
+                rid=i,
+                prompt=(np.arange(6) % TINY.vocab).astype(np.int32),
+                max_new_tokens=4,
+            )
+            for i in range(n_reqs)
+        ]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert eng.stats["decode_steps"] > 0
+        assert all(r.done for r in reqs)
+        return eng
+
+    # warm-up compiles the length-6 prefill, the compacted decode, and
+    # the gather/scatter pair (the jitted builders are lru-cached per
+    # config, so a fresh engine below reuses every executable)
+    drive(4)
+    with CompileMonitor() as mon:
+        # more requests than slots: steady-state decode plus repeated
+        # same-length prefills through admission churn
+        drive(6)
+    assert mon.count == 0, mon.events
+
+
 @pytest.mark.parametrize("temperature", [0.0])
 def test_compacted_decode_matches_full_batch(temperature):
     """Fixed-seed bit-parity: compacted sub-batch decode, the legacy

@@ -1,0 +1,36 @@
+"""mozart-check: repo-aware static analysis for the Mozart reproduction.
+
+Five checker families, each the static form of a bug class this repo has
+actually shipped and fixed by hand:
+
+  MZC01x  trace/recompile hazards around jax.jit
+  MZC02x  Pallas kernel contracts (grid/BlockSpec/accumulator/triplets)
+  MZC03x  to_dict/from_dict serialization-schema drift
+  MZC04x  mutable defaults and module-level shared state
+  MZC05x  MOZART_* env knobs vs the central registry + README table
+
+Run ``python -m tools.mozart_check src benchmarks examples``.  Suppress a
+finding with ``# mzc: ignore[MZC0xx]`` on its line.  The runtime
+counterpart of MZC01x lives in ``tools.mozart_check.tracecheck``.
+"""
+
+from __future__ import annotations
+
+from . import mzc01_trace, mzc02_pallas, mzc03_serde, mzc04_mutable, mzc05_knobs
+from .driver import Finding, ParsedFile, parse_paths, run_checkers
+
+ALL_CHECKERS = (
+    mzc01_trace.check,
+    mzc02_pallas.check,
+    mzc03_serde.check,
+    mzc04_mutable.check,
+    mzc05_knobs.check,
+)
+
+__all__ = [
+    "ALL_CHECKERS",
+    "Finding",
+    "ParsedFile",
+    "parse_paths",
+    "run_checkers",
+]

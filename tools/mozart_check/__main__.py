@@ -1,0 +1,55 @@
+"""CLI: ``python -m tools.mozart_check [PATHS...]``.
+
+Exits 1 when any finding survives suppression.  ``--knob-table`` prints
+the README markdown table generated from the knob registry instead of
+checking anything (paste its output into README.md when knobs change).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from . import ALL_CHECKERS, run_checkers
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+
+
+def knob_table() -> str:
+    sys.path.insert(0, "src")
+    from repro.launch import knobs
+
+    rows = [
+        "| knob | type | default | effect |",
+        "| --- | --- | --- | --- |",
+    ]
+    for k in knobs.KNOBS:
+        rows.append(f"| `{k.name}` | {k.type} | `{k.default}` | {k.doc} |")
+    return "\n".join(rows)
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(prog="mozart_check")
+    p.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS))
+    p.add_argument(
+        "--knob-table",
+        action="store_true",
+        help="print the README MOZART_* table generated from launch/knobs.py",
+    )
+    args = p.parse_args(argv)
+    if args.knob_table:
+        print(knob_table())
+        return 0
+    findings = run_checkers(args.paths, ALL_CHECKERS, root=os.getcwd())
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"mozart-check: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"mozart-check: clean over {' '.join(args.paths)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,45 @@
+"""Small AST helpers shared by the MZC checkers."""
+
+from __future__ import annotations
+
+import ast
+
+
+def dotted(node: ast.AST) -> str | None:
+    """`a.b.c` for Name/Attribute chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def decorator_names(node: ast.FunctionDef | ast.AsyncFunctionDef | ast.ClassDef) -> list[str]:
+    """Dotted names of decorators; for `@f(...)` the name of `f`."""
+    out = []
+    for deco in node.decorator_list:
+        target = deco.func if isinstance(deco, ast.Call) else deco
+        d = dotted(target)
+        if d is not None:
+            out.append(d)
+    return out
+
+
+def is_dataclass(cls: ast.ClassDef) -> bool:
+    return any(d in ("dataclass", "dataclasses.dataclass") for d in decorator_names(cls))
+
+
+def str_const(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def public_functions(tree: ast.Module) -> dict[str, int]:
+    """Top-level public function name -> line."""
+    return {
+        n.name: n.lineno
+        for n in tree.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) and not n.name.startswith("_")
+    }

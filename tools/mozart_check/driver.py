@@ -1,0 +1,101 @@
+"""Checker driver: walk files, parse, run checkers, apply suppressions.
+
+Findings render ruff-style (``path:line: MZC0xx message``) and are
+suppressed per line with ``# mzc: ignore[MZC0xx]`` (comma-separated
+codes; a family prefix like ``MZC01`` suppresses every ``MZC01x`` code;
+a bare ``# mzc: ignore`` suppresses everything on that line).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+
+_SUPPRESS_RE = re.compile(r"#\s*mzc:\s*ignore(?:\[([A-Za-z0-9_,\s]+)\])?")
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+@dataclasses.dataclass
+class ParsedFile:
+    path: str
+    source: str
+    lines: list[str]
+    tree: ast.Module
+
+
+def iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        elif os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames if d not in _SKIP_DIRS)
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        yield os.path.join(dirpath, fn)
+
+
+def parse_paths(paths) -> tuple[list[ParsedFile], list[Finding]]:
+    """Parse every .py under `paths`; syntax errors become MZC000 findings."""
+    files: list[ParsedFile] = []
+    findings: list[Finding] = []
+    for path in iter_py_files(paths):
+        with open(path, encoding="utf-8") as f:
+            src = f.read()
+        try:
+            tree = ast.parse(src, filename=path)
+        except SyntaxError as e:
+            findings.append(Finding(path, e.lineno or 1, "MZC000", f"syntax error: {e.msg}"))
+            continue
+        files.append(ParsedFile(path=path, source=src, lines=src.splitlines(), tree=tree))
+    return files, findings
+
+
+def suppressed_codes(file: ParsedFile, line: int) -> set[str] | None:
+    """Codes suppressed on `line` of `file`; None means ALL codes."""
+    if not 1 <= line <= len(file.lines):
+        return set()
+    m = _SUPPRESS_RE.search(file.lines[line - 1])
+    if not m:
+        return set()
+    if m.group(1) is None:
+        return None
+    return {c.strip().upper() for c in m.group(1).split(",") if c.strip()}
+
+
+def is_suppressed(file: ParsedFile, finding: Finding) -> bool:
+    codes = suppressed_codes(file, finding.line)
+    if codes is None:
+        return True
+    return any(finding.code.startswith(c) for c in codes)
+
+
+def run_checkers(paths, checkers, root: str | None = None) -> list[Finding]:
+    """Run every checker over the .py files under `paths`, drop suppressed
+    findings, and return the rest sorted by (path, line, code)."""
+    root = root or os.getcwd()
+    files, findings = parse_paths(paths)
+    by_path = {f.path: f for f in files}
+    for checker in checkers:
+        findings.extend(checker(files, root))
+    kept = []
+    for f in findings:
+        pf = by_path.get(f.path)
+        if pf is not None and is_suppressed(pf, f):
+            continue
+        kept.append(f)
+    return sorted(kept, key=lambda f: (f.path, f.line, f.code))

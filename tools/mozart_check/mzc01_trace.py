@@ -1,0 +1,183 @@
+"""MZC01x — trace/recompile hazards around `jax.jit`.
+
+MZC011  Python `if`/`while` whose condition reads a jit-traced parameter
+        (concretization error at best, silent per-value recompile at
+        worst); `x is None` / `x is not None` optional-argument guards
+        are exempt — None is pytree structure, not a traced value.
+MZC012  host conversion (`int()`/`float()`/`bool()` of a traced
+        parameter, or any `.item()`) inside a jit-compiled function.
+MZC013  `jax.jit(...)` constructed inside a plain function: every call
+        builds a fresh jitted callable with an empty trace cache.  Hoist
+        to module scope or an `functools.lru_cache`'d builder.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .astutil import decorator_names, dotted
+from .driver import Finding, ParsedFile
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_CACHING_DECOS = {"functools.lru_cache", "lru_cache", "functools.cache", "cache"}
+_HOST_CASTS = {"int", "float", "bool"}
+
+
+def _static_from_call(call: ast.Call) -> tuple[set[str], set[int]]:
+    names: set[str] = set()
+    nums: set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for s in ast.walk(kw.value):
+                if isinstance(s, ast.Constant) and isinstance(s.value, str):
+                    names.add(s.value)
+        elif kw.arg == "static_argnums":
+            for s in ast.walk(kw.value):
+                if isinstance(s, ast.Constant) and isinstance(s.value, int):
+                    nums.add(s.value)
+    return names, nums
+
+
+def _jit_decorator(deco: ast.AST) -> tuple[bool, set[str], set[int]]:
+    """(is_jit, static_argnames, static_argnums) for one decorator node."""
+    if dotted(deco) in _JIT_NAMES:
+        return True, set(), set()
+    if isinstance(deco, ast.Call):
+        f = dotted(deco.func)
+        if f in _JIT_NAMES:
+            return True, *_static_from_call(deco)
+        if f in _PARTIAL_NAMES and deco.args and dotted(deco.args[0]) in _JIT_NAMES:
+            return True, *_static_from_call(deco)
+    return False, set(), set()
+
+
+def _traced_params(fn, static_names: set[str], static_nums: set[int]) -> set[str]:
+    positional = [a.arg for a in (*fn.args.posonlyargs, *fn.args.args)]
+    traced = {
+        name
+        for i, name in enumerate(positional)
+        if name not in static_names and i not in static_nums
+    }
+    traced.update(a.arg for a in fn.args.kwonlyargs if a.arg not in static_names)
+    return traced
+
+
+def _none_guarded(test: ast.AST) -> set[str]:
+    """Names that only appear as `name is [not] None` in this test."""
+    guarded: set[str] = set()
+    for node in ast.walk(test):
+        if (
+            isinstance(node, ast.Compare)
+            and len(node.ops) == 1
+            and isinstance(node.ops[0], (ast.Is, ast.IsNot))
+            and isinstance(node.comparators[0], ast.Constant)
+            and node.comparators[0].value is None
+            and isinstance(node.left, ast.Name)
+        ):
+            guarded.add(node.left.id)
+    return guarded
+
+
+def _check_jitted_body(path: str, fn, traced: set[str], findings: list[Finding]) -> None:
+    # names rebound by nested defs/lambdas/comprehensions shadow params;
+    # a simple over-approximation: drop any traced name that is ever a
+    # nested-callable parameter or comprehension target.
+    shadowed: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)) and node is not fn:
+            shadowed.update(a.arg for a in (*node.args.posonlyargs, *node.args.args))
+            shadowed.update(a.arg for a in node.args.kwonlyargs)
+        elif isinstance(node, ast.comprehension):
+            shadowed.update(n.id for n in ast.walk(node.target) if isinstance(n, ast.Name))
+    live = traced - shadowed
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            guarded = _none_guarded(node.test)
+            hazards = sorted(
+                {
+                    n.id
+                    for n in ast.walk(node.test)
+                    if isinstance(n, ast.Name) and n.id in live and n.id not in guarded
+                }
+            )
+            if hazards:
+                kw = "if" if isinstance(node, ast.If) else "while"
+                findings.append(
+                    Finding(
+                        path,
+                        node.lineno,
+                        "MZC011",
+                        f"Python `{kw}` on jit-traced parameter(s) {', '.join(hazards)} — "
+                        f"use jax.lax.cond/jnp.where or mark the argument static",
+                    )
+                )
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (
+                isinstance(f, ast.Name)
+                and f.id in _HOST_CASTS
+                and len(node.args) == 1
+                and isinstance(node.args[0], ast.Name)
+                and node.args[0].id in live
+            ):
+                findings.append(
+                    Finding(
+                        path,
+                        node.lineno,
+                        "MZC012",
+                        f"`{f.id}({node.args[0].id})` concretizes a jit-traced parameter "
+                        f"inside the compiled function",
+                    )
+                )
+            elif isinstance(f, ast.Attribute) and f.attr == "item" and not node.args:
+                findings.append(
+                    Finding(
+                        path,
+                        node.lineno,
+                        "MZC012",
+                        "`.item()` inside a jit-compiled function forces a host sync "
+                        "(tracer error under jit)",
+                    )
+                )
+
+
+def _check_jit_call_sites(file: ParsedFile, findings: list[Finding]) -> None:
+    def visit(node: ast.AST, fn_stack: list) -> None:
+        if isinstance(node, ast.Call) and dotted(node.func) in _JIT_NAMES and fn_stack:
+            cached = any(
+                any(d in _CACHING_DECOS for d in decorator_names(fn)) for fn in fn_stack
+            )
+            if not cached:
+                findings.append(
+                    Finding(
+                        file.path,
+                        node.lineno,
+                        "MZC013",
+                        "jax.jit(...) constructed inside a function — every call re-traces "
+                        "from an empty cache; hoist to module scope or an lru_cache'd builder",
+                    )
+                )
+        push = isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+        if push:
+            fn_stack = fn_stack + [node]
+        for child in ast.iter_child_nodes(node):
+            visit(child, fn_stack)
+
+    visit(file.tree, [])
+
+
+def check(files: list[ParsedFile], root: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for file in files:
+        for node in ast.walk(file.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for deco in node.decorator_list:
+                is_jit, static_names, static_nums = _jit_decorator(deco)
+                if is_jit:
+                    traced = _traced_params(node, static_names, static_nums)
+                    _check_jitted_body(file.path, node, traced, findings)
+                    break
+        _check_jit_call_sites(file, findings)
+    return findings

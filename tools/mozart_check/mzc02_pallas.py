@@ -1,0 +1,223 @@
+"""MZC02x — Pallas kernel contracts for `kernels/*/kernel.py`.
+
+MZC021  BlockSpec `index_map` arity != grid rank (counting only
+        non-default lambda parameters — `g=group` capture idiom is fine).
+MZC022  `index_map` returns a tuple whose length != the block-shape rank.
+MZC023  VMEM scratch (accumulator) dtype is not float32 — partial
+        products must accumulate in f32 regardless of the I/O dtype.
+MZC024  a `kernels/<name>/` triplet is incomplete or its public surfaces
+        disagree: each of kernel.py/ops.py/ref.py must exist, kernel.py
+        must export a kernel entry point, and every public `f` in ops.py
+        needs an `f_ref` reference implementation in ref.py.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from .astutil import dotted, public_functions
+from .driver import Finding, ParsedFile
+
+_TRIPLET = ("kernel.py", "ops.py", "ref.py")
+# dtype leaves that are definitely not f32 accumulators; bare variable
+# names (e.g. a `dtype` parameter) are unresolvable and never flagged
+_NON_F32_DTYPES = {
+    "float16",
+    "bfloat16",
+    "float64",
+    "float8_e4m3fn",
+    "float8_e5m2",
+    "int8",
+    "int16",
+    "int32",
+    "int64",
+    "uint8",
+    "uint32",
+}
+
+
+def _tuple_env(tree: ast.AST) -> dict[str, ast.Tuple]:
+    """name -> literal-tuple value for simple assignments, to resolve
+    `grid=grid` style indirection."""
+    env: dict[str, ast.Tuple] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if isinstance(t, ast.Name) and isinstance(node.value, ast.Tuple):
+                env[t.id] = node.value
+    return env
+
+
+def _resolve_tuple(node: ast.AST | None, env: dict[str, ast.Tuple]) -> ast.Tuple | None:
+    if isinstance(node, ast.Tuple):
+        return node
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    return None
+
+
+def _block_specs(call: ast.Call):
+    """Every BlockSpec(...) Call inside a pallas_call expression."""
+    for node in ast.walk(call):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d is not None and d.split(".")[-1] == "BlockSpec":
+                yield node
+
+
+def _check_kernel_file(file: ParsedFile, findings: list[Finding]) -> None:
+    env = _tuple_env(file.tree)
+    for node in ast.walk(file.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        name = None if d is None else d.split(".")[-1]
+        if name == "pallas_call":
+            grid = next((kw.value for kw in node.keywords if kw.arg == "grid"), None)
+            grid_tuple = _resolve_tuple(grid, env)
+            rank = None if grid_tuple is None else len(grid_tuple.elts)
+            for spec in _block_specs(node):
+                shape = spec.args[0] if spec.args else None
+                index_map = spec.args[1] if len(spec.args) > 1 else None
+                for kw in spec.keywords:
+                    if kw.arg == "block_shape":
+                        shape = kw.value
+                    elif kw.arg == "index_map":
+                        index_map = kw.value
+                shape_tuple = _resolve_tuple(shape, env)
+                if not isinstance(index_map, ast.Lambda):
+                    continue
+                arity = len(index_map.args.args) - len(index_map.args.defaults)
+                if rank is not None and arity != rank:
+                    findings.append(
+                        Finding(
+                            file.path,
+                            index_map.lineno,
+                            "MZC021",
+                            f"BlockSpec index_map takes {arity} grid indices but the "
+                            f"pallas_call grid has rank {rank}",
+                        )
+                    )
+                if shape_tuple is not None and isinstance(index_map.body, ast.Tuple):
+                    got = len(index_map.body.elts)
+                    want = len(shape_tuple.elts)
+                    if got != want:
+                        findings.append(
+                            Finding(
+                                file.path,
+                                index_map.lineno,
+                                "MZC022",
+                                f"index_map returns {got} block coordinates for a "
+                                f"rank-{want} block shape",
+                            )
+                        )
+        elif name in ("VMEM", "_vmem"):
+            dtype = node.args[1] if len(node.args) > 1 else None
+            for kw in node.keywords:
+                if kw.arg == "dtype":
+                    dtype = kw.value
+            if dtype is None:
+                continue
+            dname = dotted(dtype)
+            leaf = None if dname is None else dname.split(".")[-1]
+            if leaf in _NON_F32_DTYPES:
+                findings.append(
+                    Finding(
+                        file.path,
+                        node.lineno,
+                        "MZC023",
+                        f"VMEM scratch declared as {leaf} — Pallas accumulators must "
+                        f"be float32",
+                    )
+                )
+
+
+def _parse_for_surface(path: str, by_path: dict[str, ParsedFile]) -> ast.Module | None:
+    pf = by_path.get(path)
+    if pf is not None:
+        return pf.tree
+    try:
+        with open(path, encoding="utf-8") as f:
+            return ast.parse(f.read(), filename=path)
+    except (OSError, SyntaxError):
+        return None
+
+
+def _public_surface(tree: ast.Module) -> dict[str, int]:
+    """Public defs plus `alias = existing_name` re-exports."""
+    names = public_functions(tree)
+    for node in tree.body:
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and not node.targets[0].id.startswith("_")
+            and isinstance(node.value, ast.Name)
+        ):
+            names.setdefault(node.targets[0].id, node.lineno)
+    return names
+
+
+def _check_triplets(files: list[ParsedFile], findings: list[Finding]) -> None:
+    by_path = {f.path: f for f in files}
+    dirs = sorted(
+        {
+            os.path.dirname(f.path)
+            for f in files
+            if os.path.basename(f.path) in _TRIPLET
+            and os.path.basename(os.path.dirname(os.path.dirname(f.path))) == "kernels"
+        }
+    )
+    for d in dirs:
+        anchor = next(
+            (os.path.join(d, m) for m in _TRIPLET if os.path.exists(os.path.join(d, m))),
+            os.path.join(d, "kernel.py"),
+        )
+        missing = [m for m in _TRIPLET if not os.path.exists(os.path.join(d, m))]
+        if missing:
+            findings.append(
+                Finding(
+                    anchor,
+                    1,
+                    "MZC024",
+                    f"kernel triplet {d} is missing {', '.join(missing)}",
+                )
+            )
+            continue
+        ops_tree = _parse_for_surface(os.path.join(d, "ops.py"), by_path)
+        ref_tree = _parse_for_surface(os.path.join(d, "ref.py"), by_path)
+        kern_tree = _parse_for_surface(os.path.join(d, "kernel.py"), by_path)
+        if kern_tree is not None and not public_functions(kern_tree):
+            findings.append(
+                Finding(
+                    os.path.join(d, "kernel.py"),
+                    1,
+                    "MZC024",
+                    "kernel.py exports no public kernel entry point",
+                )
+            )
+        if ops_tree is None or ref_tree is None:
+            continue
+        ref_names = _public_surface(ref_tree)
+        for fn, line in sorted(public_functions(ops_tree).items()):
+            if f"{fn}_ref" not in ref_names:
+                findings.append(
+                    Finding(
+                        os.path.join(d, "ops.py"),
+                        line,
+                        "MZC024",
+                        f"public op `{fn}` has no `{fn}_ref` reference implementation "
+                        f"in {os.path.join(d, 'ref.py')}",
+                    )
+                )
+
+
+def check(files: list[ParsedFile], root: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for file in files:
+        parent = os.path.basename(os.path.dirname(os.path.dirname(file.path)))
+        if os.path.basename(file.path) == "kernel.py" and parent == "kernels":
+            _check_kernel_file(file, findings)
+    _check_triplets(files, findings)
+    return findings

@@ -1,0 +1,121 @@
+"""MZC03x — serialization-schema drift in `to_dict`/`from_dict` pairs.
+
+MZC031  a dataclass defines one half of the pair without the other being
+        reachable (own body or a base class in the same module) — the
+        artifact either can't round-trip or silently loses the type.
+MZC032  `from_dict` doesn't cover every field: each field name must
+        appear as a handled key (string literal or constructor keyword)
+        unless the body splats `**d` into a constructor.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .astutil import dotted, is_dataclass
+from .driver import Finding, ParsedFile
+
+
+def _own_fields(cls: ast.ClassDef) -> list[str]:
+    fields = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            name = node.target.id
+            ann = dotted(node.annotation) or ""
+            if isinstance(node.annotation, ast.Subscript):
+                ann = dotted(node.annotation.value) or ""
+            if name.startswith("_") or ann.split(".")[-1] == "ClassVar":
+                continue
+            fields.append(name)
+    return fields
+
+
+def _method(cls: ast.ClassDef, name: str):
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node.name == name:
+            return node
+    return None
+
+
+def _base_chain(cls: ast.ClassDef, classes: dict[str, ast.ClassDef]) -> list[ast.ClassDef]:
+    chain, todo, seen = [], [cls], set()
+    while todo:
+        c = todo.pop()
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        chain.append(c)
+        for b in c.bases:
+            bn = dotted(b)
+            if bn in classes:
+                todo.append(classes[bn])
+    return chain
+
+
+def _handled_keys(fn: ast.FunctionDef) -> tuple[set[str], bool]:
+    """(string-literal + constructor-keyword names in the body, saw **splat)."""
+    keys: set[str] = set()
+    splat = False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            keys.add(node.value)
+        elif isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg is None:
+                    splat = True
+                else:
+                    keys.add(kw.arg)
+    return keys, splat
+
+
+def check(files: list[ParsedFile], root: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for file in files:
+        classes = {n.name: n for n in file.tree.body if isinstance(n, ast.ClassDef)}
+        for cls in classes.values():
+            if not is_dataclass(cls):
+                continue
+            chain = _base_chain(cls, classes)
+            has_to = _method(cls, "to_dict") is not None
+            from_fn = _method(cls, "from_dict")
+            to_reachable = any(_method(c, "to_dict") for c in chain)
+            from_reachable = any(_method(c, "from_dict") for c in chain)
+            if has_to and not from_reachable:
+                findings.append(
+                    Finding(
+                        file.path,
+                        cls.lineno,
+                        "MZC031",
+                        f"dataclass {cls.name} defines to_dict but no from_dict is "
+                        f"reachable — the artifact cannot round-trip",
+                    )
+                )
+            if from_fn is not None and not to_reachable:
+                findings.append(
+                    Finding(
+                        file.path,
+                        cls.lineno,
+                        "MZC031",
+                        f"dataclass {cls.name} defines from_dict but no to_dict is "
+                        f"reachable — nothing can produce its serialized form",
+                    )
+                )
+            if from_fn is not None:
+                fields = []
+                for c in chain:
+                    for f in _own_fields(c):
+                        if f not in fields:
+                            fields.append(f)
+                keys, splat = _handled_keys(from_fn)
+                missing = [f for f in fields if f not in keys]
+                if missing and not splat:
+                    findings.append(
+                        Finding(
+                            file.path,
+                            from_fn.lineno,
+                            "MZC032",
+                            f"{cls.name}.from_dict never handles field(s) "
+                            f"{', '.join(missing)} — round-trip drops them",
+                        )
+                    )
+    return findings

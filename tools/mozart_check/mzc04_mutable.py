@@ -1,0 +1,117 @@
+"""MZC04x — shared mutable state.
+
+MZC041  mutable default value in a function signature or dataclass
+        field (the PR-1 shared-config bug class) — every caller shares
+        one object; use None + init or dataclasses.field(default_factory).
+MZC042  module-level mutable cache (empty dict/list/set binding) with no
+        lock and no documented single-writer note within the three lines
+        above it — benign today, a data race after the next refactor.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from .astutil import dotted, is_dataclass
+from .driver import Finding, ParsedFile
+
+_MUTABLE_CALLS = {
+    "list",
+    "dict",
+    "set",
+    "defaultdict",
+    "collections.defaultdict",
+    "OrderedDict",
+    "collections.OrderedDict",
+}
+_NOTE_RE = re.compile(
+    r"single[- ]writer|(?<![a-zA-Z])lock|guarded|not thread-safe", re.IGNORECASE
+)
+
+
+def _is_mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return dotted(node.func) in _MUTABLE_CALLS
+    return False
+
+
+def _is_empty_container(node: ast.AST) -> bool:
+    if isinstance(node, ast.Dict):
+        return not node.keys
+    if isinstance(node, ast.List):
+        return not node.elts
+    if isinstance(node, ast.Call):
+        d = dotted(node.func)
+        if d in ("defaultdict", "collections.defaultdict"):
+            return True
+        return d in ("list", "dict", "set", "OrderedDict", "collections.OrderedDict") and not (
+            node.args or node.keywords
+        )
+    return False
+
+
+def _has_note(file: ParsedFile, line: int) -> bool:
+    lo = max(0, line - 4)
+    return any(_NOTE_RE.search(text) for text in file.lines[lo:line])
+
+
+def check(files: list[ParsedFile], root: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for file in files:
+        for node in ast.walk(file.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                defaults = [*node.args.defaults, *node.args.kw_defaults]
+                for default in defaults:
+                    if default is not None and _is_mutable_default(default):
+                        findings.append(
+                            Finding(
+                                file.path,
+                                default.lineno,
+                                "MZC041",
+                                "mutable default argument is shared across every call — "
+                                "use None and initialize inside the function",
+                            )
+                        )
+            elif isinstance(node, ast.ClassDef) and is_dataclass(node):
+                for stmt in node.body:
+                    if (
+                        isinstance(stmt, ast.AnnAssign)
+                        and stmt.value is not None
+                        and _is_mutable_default(stmt.value)
+                    ):
+                        findings.append(
+                            Finding(
+                                file.path,
+                                stmt.lineno,
+                                "MZC041",
+                                "mutable dataclass field default is shared across "
+                                "instances — use dataclasses.field(default_factory=...)",
+                            )
+                        )
+        for stmt in file.tree.body:
+            targets = []
+            if isinstance(stmt, ast.Assign):
+                targets, value = stmt.targets, stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                targets, value = [stmt.target], stmt.value
+            else:
+                continue
+            if (
+                len(targets) == 1
+                and isinstance(targets[0], ast.Name)
+                and _is_empty_container(value)
+                and not _has_note(file, stmt.lineno)
+            ):
+                findings.append(
+                    Finding(
+                        file.path,
+                        stmt.lineno,
+                        "MZC042",
+                        f"module-level mutable cache `{targets[0].id}` has neither a lock "
+                        f"nor a documented single-writer note in the preceding comment",
+                    )
+                )
+    return findings

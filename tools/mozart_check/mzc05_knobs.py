@@ -1,0 +1,143 @@
+"""MZC05x — the `MOZART_*` env-knob registry.
+
+MZC051  an `os.environ[...]` / `os.environ.get` / `os.getenv` read of a
+        `MOZART_*` name that is not declared in the central registry
+        (`src/repro/launch/knobs.py`).
+MZC052  the README knob table and the registry disagree (or the table is
+        missing): the docs are generated from the registry and must
+        track it exactly.
+MZC053  a registry `Knob(...)` entry is malformed — name/type/default/doc
+        must all be present, literal, and non-empty.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from .astutil import dotted, str_const
+from .driver import Finding, ParsedFile
+
+_REGISTRY_SUFFIX = os.path.join("launch", "knobs.py")
+_README_ROW_RE = re.compile(r"^\|\s*`(MOZART_[A-Z0-9_]+)`")
+_KNOB_KEYS = ("name", "type", "default", "doc")
+
+
+def _registry_file(files: list[ParsedFile], root: str) -> ParsedFile | None:
+    for f in files:
+        if f.path.endswith(_REGISTRY_SUFFIX):
+            return f
+    path = os.path.join(root, "src", "repro", "launch", "knobs.py")
+    try:
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        return ParsedFile(path=path, source=src, lines=src.splitlines(), tree=ast.parse(src))
+    except (OSError, SyntaxError):
+        return None
+
+
+def _registry_entries(reg: ParsedFile, findings: list[Finding]) -> set[str]:
+    names: set[str] = set()
+    for node in ast.walk(reg.tree):
+        if not (isinstance(node, ast.Call) and (dotted(node.func) or "").endswith("Knob")):
+            continue
+        kwargs = {kw.arg: kw.value for kw in node.keywords if kw.arg}
+        bad = []
+        for k in _KNOB_KEYS:
+            value = str_const(kwargs[k]) if k in kwargs else None
+            if value is None or (k != "default" and not value.strip()):
+                bad.append(k)
+        if bad:
+            findings.append(
+                Finding(
+                    reg.path,
+                    node.lineno,
+                    "MZC053",
+                    f"Knob entry needs literal, non-empty {'/'.join(_KNOB_KEYS)} "
+                    f"(problem with: {', '.join(sorted(set(bad)))})",
+                )
+            )
+            continue
+        names.add(str_const(kwargs["name"]))
+    return names
+
+
+def _env_reads(file: ParsedFile):
+    """(line, knob-name) for every literal MOZART_* env read."""
+    for node in ast.walk(file.tree):
+        name = None
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d == "os.getenv" and node.args:
+                name = str_const(node.args[0])
+            elif d == "os.environ.get" and node.args:
+                name = str_const(node.args[0])
+        elif isinstance(node, ast.Subscript) and dotted(node.value) == "os.environ":
+            name = str_const(node.slice)
+        if name is not None and name.startswith("MOZART_"):
+            yield node.lineno, name
+
+
+def _check_readme(root: str, registry: set[str], reg_path: str, findings: list[Finding]) -> None:
+    readme = os.path.join(root, "README.md")
+    try:
+        with open(readme, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+    except OSError:
+        return
+    documented: dict[str, int] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _README_ROW_RE.match(line)
+        if m:
+            documented.setdefault(m.group(1), i)
+    doc_names = set(documented)
+    missing = sorted(registry - doc_names)
+    stale = sorted(doc_names - registry)
+    if missing:
+        findings.append(
+            Finding(
+                readme,
+                min(documented.values()) if documented else 1,
+                "MZC052",
+                f"README knob table is missing registry knob(s) {', '.join(missing)} — "
+                f"regenerate it from {reg_path}",
+            )
+        )
+    for name in stale:
+        findings.append(
+            Finding(
+                readme,
+                documented[name],
+                "MZC052",
+                f"README documents `{name}` which is not in the registry ({reg_path})",
+            )
+        )
+
+
+def check(files: list[ParsedFile], root: str) -> list[Finding]:
+    findings: list[Finding] = []
+    reg = _registry_file(files, root)
+    registry: set[str] = set()
+    if reg is None:
+        reg_path = os.path.join("src", "repro", _REGISTRY_SUFFIX)
+    else:
+        reg_path = reg.path
+        registry = _registry_entries(reg, findings)
+    for file in files:
+        if file.path.endswith(_REGISTRY_SUFFIX):
+            continue
+        for line, name in _env_reads(file):
+            if name not in registry:
+                findings.append(
+                    Finding(
+                        file.path,
+                        line,
+                        "MZC051",
+                        f"env knob `{name}` read outside the central registry — declare "
+                        f"it in {reg_path} and read it through repro.launch.knobs",
+                    )
+                )
+    if reg is not None:
+        _check_readme(root, registry, reg_path, findings)
+    return findings

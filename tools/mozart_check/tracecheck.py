@@ -1,0 +1,58 @@
+"""Runtime counterpart of MZC01x: count fresh XLA compilations.
+
+`CompileMonitor` hooks JAX's internal monitoring bus and counts
+``/jax/core/compile/backend_compile_duration`` events — one per fresh
+executable build, zero on trace-cache hits — so tests and benchmarks can
+assert that steady-state serving compiles nothing new:
+
+    with CompileMonitor() as mon:
+        engine.run()
+    assert mon.count == 0
+
+Only jax internals are touched at ``__enter__`` time, so importing this
+module is safe in environments without jax.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+
+class CompileMonitor:
+    """Counts backend (XLA) compilations between __enter__ and __exit__."""
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.events: list[str] = []
+        self._active = False
+
+    def _on_event(self, event: str, duration: float, **kwargs) -> None:
+        if self._active and event.endswith("backend_compile_duration"):
+            self.count += 1
+            self.events.append(event)
+
+    def __enter__(self) -> "CompileMonitor":
+        from jax._src import monitoring
+
+        self._monitoring = monitoring
+        self._active = True
+        monitoring.register_event_duration_secs_listener(self._on_event)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._active = False
+        unregister = getattr(
+            self._monitoring, "_unregister_event_duration_listener_by_callback", None
+        )
+        if unregister is not None:
+            unregister(self._on_event)
+        # without the private unregister hook the listener stays on the
+        # bus but self._active keeps it inert
+        return False
+
+
+@contextlib.contextmanager
+def count_compiles():
+    """``with count_compiles() as mon: ...`` convenience wrapper."""
+    with CompileMonitor() as mon:
+        yield mon
