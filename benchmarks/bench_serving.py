@@ -16,9 +16,17 @@ same request trace:
 
 Emulated and compacted must emit IDENTICAL tokens (asserted; greedy,
 fixed seed).  The gate in benchmarks/compare.py holds
-``speedup_compacted_vs_emulated`` above the baseline threshold.  Run as
-a module (``PYTHONPATH=src python -m benchmarks.bench_serving``) or via
-benchmarks/run.py.
+``speedup_compacted_vs_emulated`` above the baseline threshold.
+
+PR 7 adds a prompt-length-MIX workload through the paged-KV engine:
+Zipf-weighted short/medium/long prompts spanning every power-of-two
+prefill bucket.  The timed pass reports request-level TTFT and TPOT
+p50/p99 into BENCH_serving.json, and its recompile count is gated at
+``len(prefill_buckets) + 1`` executables (one prefill per bucket plus
+the shared paged decode) — arbitrary length mixes must not retrace.
+
+Run as a module (``PYTHONPATH=src python -m benchmarks.bench_serving``)
+or via benchmarks/run.py.
 """
 
 from __future__ import annotations
@@ -53,6 +61,7 @@ DECODE_BATCH = 2
 N_REQUESTS = 8 if FAST else 16
 MAX_NEW = 8 if FAST else 16
 MAX_LEN = 64
+N_MIX = 10 if FAST else 20
 
 
 def _requests(rng):
@@ -69,8 +78,57 @@ def _requests(rng):
     return reqs
 
 
+def _mix_requests(rng, n):
+    """Zipf-weighted short/medium/long prompt mix spanning every prefill
+    bucket of MAX_LEN=64 (16/32/64): short prompts dominate, but the
+    tail crosses both bucket boundaries."""
+    bands = ((4, 15), (17, 31), (33, 60))
+    weights = np.asarray([1.0, 1.0 / 2.0, 1.0 / 3.0])
+    weights = weights / weights.sum()
+    reqs = []
+    for i in range(n):
+        lo, hi = bands[int(rng.choice(len(bands), p=weights))]
+        reqs.append(
+            Request(
+                rid=i,
+                prompt=rng.integers(0, CFG.vocab, size=int(rng.integers(lo, hi + 1))).astype(
+                    np.int32
+                ),
+                max_new_tokens=MAX_NEW,
+            )
+        )
+    return reqs
+
+
+def _run_mix(params, *, paged):
+    rng = np.random.default_rng(7)
+    eng = ServingEngine(
+        CFG,
+        params,
+        max_batch=MAX_BATCH,
+        max_len=MAX_LEN,
+        decode_batch=DECODE_BATCH,
+        compact=True,
+        paged=paged,
+    )
+    reqs = _mix_requests(rng, N_MIX)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    return reqs, eng, dt
+
+
+def _pct_ms(samples, q):
+    return float(np.percentile(np.asarray(samples), q) * 1e3) if len(samples) else 0.0
+
+
 def _run_engine(params, *, decode_batch, compact):
     rng = np.random.default_rng(0)
+    # paged=False: this trio measures the PR-5 compacted-vs-emulated
+    # DENSE-cache comparison the speedup gate is defined over; the
+    # paged engine gets its own workload, parity, and gates below.
     eng = ServingEngine(
         CFG,
         params,
@@ -78,6 +136,7 @@ def _run_engine(params, *, decode_batch, compact):
         max_len=MAX_LEN,
         decode_batch=decode_batch,
         compact=compact,
+        paged=False,
     )
     reqs = _requests(rng)
     for r in reqs:
@@ -129,6 +188,41 @@ def run():
             )
         )
 
+    # prompt-length-mix workload through the paged engine: the warmup
+    # pass builds one prefill executable per bucket plus the shared
+    # paged decode; the timed pass must stay within that budget (the
+    # tracecheck count catches any per-length retrace sneaking back in)
+    # while the request timing marks give TTFT/TPOT percentiles.
+    _run_mix(params, paged=True)
+    with CompileMonitor() as mix_mon:
+        mix_reqs, mix_eng, mix_dt = _run_mix(params, paged=True)
+    ttft = [r.t_first - r.t_submit for r in mix_reqs if r.t_first is not None]
+    tpot = [
+        (r.t_done - r.t_first) / (len(r.out_tokens) - 1)
+        for r in mix_reqs
+        if r.t_done is not None and r.t_first is not None and len(r.out_tokens) > 1
+    ]
+    buckets = [int(b) for b in mix_eng.buckets]
+    budget = len(buckets) + 1
+    assert mix_mon.count <= budget, (mix_mon.count, budget, mix_mon.events)
+    dense_reqs, _, _ = _run_mix(params, paged=False)
+    paged_matches_dense = [r.out_tokens for r in mix_reqs] == [
+        r.out_tokens for r in dense_reqs
+    ]
+    assert paged_matches_dense, "paged decode diverged from the dense cache"
+    mix_tok_s = mix_eng.stats["tokens_out"] / max(mix_dt, 1e-9)
+    rows.append(
+        (
+            "serving.mix_paged",
+            mix_dt * 1e6 / max(mix_eng.stats["decode_steps"], 1),
+            f"tok_s={mix_tok_s:.1f} ttft_p50={_pct_ms(ttft, 50):.1f}ms "
+            f"ttft_p99={_pct_ms(ttft, 99):.1f}ms "
+            f"tpot_p50={_pct_ms(tpot, 50):.2f}ms "
+            f"tpot_p99={_pct_ms(tpot, 99):.2f}ms "
+            f"recompiles={mix_mon.count}/{budget}",
+        )
+    )
+
     identical = results["compacted"]["tokens"] == results["emulated"]["tokens"]
     assert identical, "compacted decode diverged from the emulated schedule"
     speedup_step = (
@@ -161,6 +255,16 @@ def run():
             "steady_state_recompiles": {
                 name: results[name]["recompiles_steady"] for name in results
             },
+            "prefill_buckets": buckets,
+            "mix_n_requests": N_MIX,
+            "mix_tok_s": mix_tok_s,
+            "ttft_p50_ms": _pct_ms(ttft, 50),
+            "ttft_p99_ms": _pct_ms(ttft, 99),
+            "tpot_p50_ms": _pct_ms(tpot, 50),
+            "tpot_p99_ms": _pct_ms(tpot, 99),
+            "mix_recompiles_steady": mix_mon.count,
+            "mix_recompile_budget": budget,
+            "paged_matches_dense": paged_matches_dense,
         },
     )
     return rows

@@ -15,7 +15,13 @@ nonzero on any regression:
   * batch_solve — the generation-batched Layer-3 evaluation must stay
     >= min_speedup_vs_pr3 over the reconstructed PR-3 per-genome path
     (the dev container measures 2.4-2.9x; the threshold is loose for
-    noisy CI runners) and keep producing identical solutions.
+    noisy CI runners) and keep producing identical solutions;
+  * serving — compacted decode must hold its speedup over the schedule
+    emulation with identical tokens and zero steady-state recompiles,
+    the prompt-length-mix workload must stay inside the paged engine's
+    recompile budget (len(prefill_buckets)+1 executables) with paged
+    tokens matching the dense cache, and the mix's TTFT/TPOT p50/p99
+    must stay under the (deliberately loose) latency ceilings.
 
 Usage: PYTHONPATH=src python -m benchmarks.compare [--dir DIR]
        [--baseline benchmarks/baselines.json]
@@ -133,6 +139,43 @@ def check(bench_dir: str, baselines: dict) -> list[str]:
                 else:
                     print(f"OK serving: steady-state recompiles <= "
                           f"{max_rec} across {sorted(rec)}")
+        if base.get("require_mix_recompile_budget", False):
+            budget = blob.get("mix_recompile_budget")
+            rec_mix = blob.get("mix_recompiles_steady")
+            if budget is None or rec_mix is None:
+                failures.append(
+                    "serving: artifact lacks the prompt-mix recompile "
+                    "counts — bench_serving must run the mix workload")
+            elif int(rec_mix) > int(budget):
+                failures.append(
+                    f"serving: mixed-length serving now builds {rec_mix} "
+                    f"executables — budget is len(buckets)+1 = {budget}")
+            else:
+                print(f"OK serving: prompt-mix recompiles {rec_mix} <= "
+                      f"bucket budget {budget}")
+            if not blob.get("paged_matches_dense", False):
+                failures.append(
+                    "serving: paged decode no longer matches the dense "
+                    "cache token-for-token on the prompt mix")
+        for key, limit_key in (("ttft_p50_ms", "max_ttft_p50_ms"),
+                               ("ttft_p99_ms", "max_ttft_p99_ms"),
+                               ("tpot_p50_ms", "max_tpot_p50_ms"),
+                               ("tpot_p99_ms", "max_tpot_p99_ms")):
+            limit = base.get(limit_key)
+            if limit is None:
+                continue
+            val = blob.get(key)
+            if val is None:
+                failures.append(
+                    f"serving: artifact lacks {key} — bench_serving "
+                    f"must report prompt-mix latency percentiles")
+            elif float(val) > float(limit):
+                failures.append(
+                    f"serving: {key} regressed: {float(val):.1f}ms > "
+                    f"baseline {float(limit):.1f}ms")
+            else:
+                print(f"OK serving: {key} {float(val):.1f}ms <= "
+                      f"{float(limit):.1f}ms")
     return failures
 
 

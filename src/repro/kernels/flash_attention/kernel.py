@@ -133,3 +133,104 @@ def _tpu_params():
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     except Exception:
         return None
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention: one query token per sequence, KV behind a page
+# table.  The page axis is the innermost (sequential) grid dim; each step
+# the K/V index_maps dereference `tables[b, p]` — a scalar-prefetch
+# lookup, so the DMA engine fetches exactly the pages the slot owns and
+# the dense (B, C, ...) cache view is never materialized.
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, ps: int,
+                         n_pages_per_slot: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+
+    # Block-level skip: pages wholly past the slot's live length hold
+    # either stale KV or the null page — no compute, no mask fixups.
+    @pl.when(p * ps < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (1, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (ps, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (1, ps)
+        s *= 1.0 / math.sqrt(q.shape[-1])
+        kpos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        pr = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + pr.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            pr, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages_per_slot - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_hp(q, k_pages, v_pages, tables, lengths, *,
+                              interpret: bool = False):
+    """Single-token decode attention through a page table.
+
+    q: (B, H, hd) — the current token's queries; k_pages/v_pages:
+    (Hkv, P, ps, hd) page pools with H % Hkv == 0 (GQA); tables:
+    (B, n_pages_per_slot) int32 physical page ids (0 = null page);
+    lengths: (B,) int32 live tokens per slot — the query sits at
+    position lengths[b]-1, so causality is just `kpos < length`.
+    Returns (B, H, hd)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    bsz, h, hd = q.shape
+    hkv, _, ps, _ = k_pages.shape
+    npp = tables.shape[1]
+    group = h // hkv
+
+    kernel = functools.partial(_paged_decode_kernel, ps=ps,
+                               n_pages_per_slot=npp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, h, npp),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd),
+                         lambda b, i, p, tbl, ln: (b, i, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda b, i, p, tbl, ln, g=group:
+                         (i // g, tbl[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda b, i, p, tbl, ln, g=group:
+                         (i // g, tbl[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd),
+                               lambda b, i, p, tbl, ln: (b, i, 0)),
+        scratch_shapes=[
+            _vmem((1,), jnp.float32),       # running max
+            _vmem((1,), jnp.float32),       # running denominator
+            _vmem((1, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, h, hd), q.dtype),
+        compiler_params=_tpu_params(),
+        interpret=interpret,
+    )(tables, lengths, q, k_pages, v_pages)

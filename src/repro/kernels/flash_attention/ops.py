@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels._compat import on_tpu as _on_tpu
 
-from .kernel import flash_attention_bhsd
+from .kernel import flash_attention_bhsd, paged_decode_attention_hp
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
@@ -35,3 +35,27 @@ def flash_attention(q, k, v, *, causal: bool = True,
     of = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
                               bq=bq, bk=bk, interpret=it)
     return of.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """Paged single-token decode attention (vLLM-style): attend one query
+    per sequence through a page table instead of a dense (B, C, ...)
+    cache slab.
+
+    Model-layout API matching the serving page pools: q (B, 1, H, hd) —
+    the current token; k_pages/v_pages (P, ps, Hkv, hd) — one layer's
+    page pool from `models.api.init_paged_cache` (page 0 reserved as the
+    never-read null page); tables (B, n_pages_per_slot) int32 physical
+    page ids; lengths (B,) int32 live tokens per slot INCLUDING the
+    current token (whose k/v must already be scattered into the pages).
+    Returns (B, 1, H, hd)."""
+    b, _, h, hd = q.shape
+    kp = k_pages.transpose(2, 0, 1, 3)   # (Hkv, P, ps, hd)
+    vp = v_pages.transpose(2, 0, 1, 3)
+    it = (not _on_tpu()) if interpret is None else interpret
+    out = paged_decode_attention_hp(
+        q[:, 0], kp, vp, tables.astype(jnp.int32),
+        lengths.astype(jnp.int32), interpret=it)
+    return out[:, None]

@@ -33,5 +33,35 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
         .astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, tables,
+                               lengths) -> jnp.ndarray:
+    """Oracle for the paged decode op: gather the page table into a dense
+    cache view, then mask-and-softmax exactly like dense decode.
+    q (B, 1, H, hd); k_pages/v_pages (P, ps, Hkv, hd);
+    tables (B, npp) i32; lengths (B,) i32 (incl. the current token)."""
+    b, _, h, hd = q.shape
+    npp = tables.shape[1]
+    ps = k_pages.shape[1]
+    hkv = k_pages.shape[2]
+
+    def dense(pages):                      # (B, npp*ps, Hkv, hd)
+        g = jnp.take(pages, tables, axis=0)
+        return g.reshape(b, npp * ps, hkv, hd)
+
+    k, v = dense(k_pages), dense(v_pages)
+    group = h // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bchd->bhqc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    kpos = jnp.arange(npp * ps)[None, :]
+    mask = kpos < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqc,bchd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 # pre-PR-6 name, kept importable
 attention_ref = flash_attention_ref

@@ -65,6 +65,25 @@ KNOBS: tuple[Knob, ...] = (
         doc="set to 0 for the serving engine's full-width schedule emulation instead of "
         "the compacted sub-batch decode",
     ),
+    Knob(
+        name="MOZART_PAGED_KV",
+        type="bool",
+        default="1",
+        doc="set to 0 for the dense per-slot KV rectangles instead of the block-paged "
+        "KV pool + bucketed prefill (transformer family without SWA/MoE only)",
+    ),
+    Knob(
+        name="MOZART_KV_PAGE_SIZE",
+        type="int",
+        default="16",
+        doc="tokens per KV page in the paged serving cache (power of two)",
+    ),
+    Knob(
+        name="MOZART_PREFILL_BUCKET_MIN",
+        type="int",
+        default="16",
+        doc="smallest power-of-two prompt-length bucket padded prefills compile for",
+    ),
 )
 
 _BY_NAME = {k.name: k for k in KNOBS}

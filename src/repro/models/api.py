@@ -68,6 +68,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return m.init_cache(cfg, batch, max_len)
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=None):
+    """Paged KV page pools (transformer-only — the serving engine falls
+    back to the dense cache for every other family)."""
+    if cfg.family != "transformer":
+        raise NotImplementedError(
+            f"paged KV cache is transformer-only, not {cfg.family}")
+    return family_module(cfg).init_paged_cache(cfg, num_pages, page_size,
+                                               dtype)
+
+
 def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
     return family_module(cfg).decode_step(cfg, params, tokens, cache)
 

@@ -642,6 +642,31 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"segments": segs, "index": jnp.zeros((), jnp.int32)}
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=None) -> list:
+    """Per-segment KV page pools: the paged analogue of `init_cache`'s
+    (L, B, C, ...) slabs with the (B, C) rectangle replaced by a shared
+    (num_pages, page_size) pool.  Page 0 is reserved as the null page
+    every unused page-table entry points at; its contents are never read
+    (decode masks by per-slot length).  Slot ownership / page tables live
+    with the serving engine (`repro.serving.paged.PagePool`)."""
+    dt = dtype or cfg.jdtype
+    segs = []
+    for kind, count in layer_segments(cfg):
+        if cfg.use_mla:
+            segs.append({"latent": jnp.zeros(
+                (count, num_pages, page_size,
+                 cfg.mla_kv_rank + cfg.mla_rope_dim), dt)})
+        else:
+            segs.append({
+                "k": jnp.zeros((count, num_pages, page_size,
+                                cfg.kv_heads, cfg.hd), dt),
+                "v": jnp.zeros((count, num_pages, page_size,
+                                cfg.kv_heads, cfg.hd), dt),
+            })
+    return segs
+
+
 def _ring_slot(cfg: ModelConfig, index, clen: int):
     return index % clen if cfg.window else index
 

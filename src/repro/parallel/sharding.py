@@ -268,3 +268,25 @@ def cache_shardings(mesh: Mesh, cache: Any, kv_heads: int,
             dims[cdim] = "model"
         return NamedSharding(mesh, P(*dims))
     return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def paged_cache_shardings(mesh: Mesh, pool_segments: Any,
+                          kv_heads: int) -> Any:
+    """Paged KV page pools: leaves are (L, pages, page_size, kvh, hd) —
+    or an MLA latent (L, pages, page_size, D).  Only the kv-head dim
+    TP-shards (over "model", when divisible); the page dims never shard,
+    because pages form one global pool addressed through per-slot tables
+    and splitting the pool would turn every table lookup into a
+    cross-device gather.  The dense sub-caches the engine gathers out of
+    the pool then inherit the same head sharding `cache_shardings` would
+    have assigned, so the decode math shards identically to the dense
+    path."""
+    msz = axis_size(mesh, "model")
+
+    def leaf(x):
+        dims: list = [None] * x.ndim
+        if x.ndim == 5 and x.shape[3] == kv_heads \
+                and _div(kv_heads, msz) and kv_heads >= msz:
+            dims[3] = "model"
+        return NamedSharding(mesh, P(*dims))
+    return jax.tree.map(leaf, pool_segments)

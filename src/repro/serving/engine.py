@@ -9,6 +9,20 @@ Mozart `ExecutionPolicy` (batch-agnostic attention wants small per-op
 batch with high TP; batch-sensitive projections want the opposite — the
 engine's `decode_batch` honors the policy's compromise).
 
+KV STORAGE.  By default (`MOZART_PAGED_KV=1`, transformer family without
+SWA/MoE) the KV cache is BLOCK-PAGED: fixed-size pages from a shared
+pool, owned per-slot through page tables (`serving.paged.PagePool`),
+allocated on admission/growth and freed on finish — HBM holds live
+tokens, not `max_batch x max_len` rectangles.  Prefill pads prompts to
+power-of-two BUCKETS so an arbitrary prompt-length mix compiles at most
+`len(engine.buckets)` prefill executables plus one decode executable.
+Decode gathers the active slots' pages into the dense layout
+`decode_step` expects and scatters back, so paged decode is bit-exact
+against the dense cache.  When the free list runs dry the engine
+preempts the youngest-admitted slot (requeued at the queue front and
+later resumed by re-prefilling its tokens).  `paged=False` (or
+`MOZART_PAGED_KV=0`) restores the dense rectangles.
+
 When `decode_batch < max_batch` the engine runs a COMPACTED sub-batch
 decode: the active slots' cache slices are gathered into a dense
 (decode_batch, ...) sub-cache, one static-shaped decode runs over that
@@ -20,14 +34,21 @@ so admission/finish churn cannot starve or double-serve a slot).  Set
 round-robin emulation, kept for benchmarking against the PR-4 behavior.
 
 A `mesh` with a >1 "model" axis makes the policy's TP degree real:
-params and KV cache are placed with `parallel.sharding`'s rules and the
-jitted prefill/decode run sharded over the mesh.  `mesh=None` is the
-single-device no-op path.
+params and KV cache (dense slabs or page pools) are placed with
+`parallel.sharding`'s rules and the jitted prefill/decode run sharded
+over the mesh.  `mesh=None` is the single-device no-op path.
+
+Requests carry wall-clock marks (`t_submit`/`t_first`/`t_done`) so the
+serving benchmark can report TTFT/TPOT percentiles, and a
+`finish_reason` ("eos", "max_new_tokens", "length" at the cache
+boundary, "rejected" for prompts that cannot fit, "capacity" when a lone
+request exhausts the page pool).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any
 
 import jax
@@ -37,6 +58,7 @@ import numpy as np
 from repro.launch import knobs
 from repro.models import api
 from repro.models.config import ModelConfig
+from . import paged as paged_kv
 from .sampling import sample
 
 Params = Any
@@ -50,6 +72,12 @@ class Request:
     temperature: float = 0.0
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: str | None = None
+    # wall-clock marks for TTFT/TPOT accounting (monotonic seconds)
+    t_submit: float | None = None
+    t_first: float | None = None
+    t_done: float | None = None
+    admit_seq: int = -1           # engine admission order (preemption picks max)
 
 
 def _tree_set_slot(batched, single, b: int):
@@ -92,6 +120,13 @@ def _scatter_slots(cache, sub, sel):
     return {"segments": segs, "index": idx}
 
 
+def _rewind_inactive(index, inactive: list[int]):
+    """ONE batched scatter-add rewinding every slot that did not advance
+    this step (the PR-4 code dispatched a separate `.at[b].add(-1)` per
+    inactive slot)."""
+    return index.at[jnp.asarray(inactive, jnp.int32)].add(-1)
+
+
 _GATHER = jax.jit(_gather_slots)
 # the engine drops the old cache the moment the scatter returns, so the
 # full-size buffers are donated — on accelerators the scatter updates in
@@ -117,7 +152,9 @@ class ServingEngine:
     def __init__(self, mcfg: ModelConfig, params: Params, *,
                  max_batch: int = 4, max_len: int = 512,
                  decode_batch: int | None = None, eos_id: int = -1,
-                 compact: bool | None = None, mesh=None):
+                 compact: bool | None = None, mesh=None,
+                 paged: bool | None = None, page_size: int | None = None,
+                 num_pages: int | None = None):
         self.mcfg = mcfg
         self.params = params
         self.max_batch = max_batch
@@ -133,56 +170,161 @@ class ServingEngine:
         # ({"segments": [(L, B, C, ...)], "index": (B,)}); other families
         # ({"layers": [(B, ...)]}) fall back to the schedule emulation
         self.compact = compact and mcfg.family == "transformer"
+        if paged is None:
+            paged = knobs.get_bool("MOZART_PAGED_KV")
+        # paged + bucketed serving is exact only for the plain transformer
+        # cache (no SWA ring, no MoE capacity router) — see paged_supported
+        self.paged = paged and paged_kv.paged_supported(mcfg)
         self._next_slot = 0           # rotation cursor: a SLOT ID
         self.eos_id = eos_id
-        self.cache = api.init_cache(mcfg, max_batch, max_len)
-        # per-slot cache lengths (vector index -> mixed-length batching)
-        self.cache["index"] = jnp.zeros((max_batch,), jnp.int32)
+        self._admit_counter = 0
+        if self.paged:
+            ps = page_size or knobs.get_int("MOZART_KV_PAGE_SIZE")
+            self.pool = paged_kv.PagePool(
+                mcfg, max_batch, max_len, page_size=ps, num_pages=num_pages)
+            self.buckets = paged_kv.prefill_buckets(
+                max_len, knobs.get_int("MOZART_PREFILL_BUCKET_MIN"))
+            self.capacity = paged_kv.pool_token_capacity(self.pool, max_len)
+            self.cache = None
+        else:
+            self.pool = None
+            self.buckets = ()
+            self.capacity = max_len
+            self.cache = api.init_cache(mcfg, max_batch, max_len)
+            # per-slot cache lengths (vector index -> mixed-length batching)
+            self.cache["index"] = jnp.zeros((max_batch,), jnp.int32)
         self.mesh = mesh
         if mesh is not None:
             from repro.parallel.sharding import (cache_shardings,
+                                                 paged_cache_shardings,
                                                  params_shardings)
             self.params = jax.device_put(
                 params, params_shardings(mesh, params))
-            self.cache = jax.device_put(
-                self.cache, cache_shardings(mesh, self.cache,
-                                            mcfg.kv_heads, max_batch))
+            if self.paged:
+                self.pool.segments = jax.device_put(
+                    self.pool.segments,
+                    paged_cache_shardings(mesh, self.pool.segments,
+                                          mcfg.kv_heads))
+            else:
+                self.cache = jax.device_put(
+                    self.cache, cache_shardings(mesh, self.cache,
+                                                mcfg.kv_heads, max_batch))
         self.slots: list[Request | None] = [None] * max_batch
         self.queue: list[Request] = []
         self.next_token = np.zeros((max_batch, 1), np.int32)
         self.key = jax.random.PRNGKey(0)
         self._decode = _decode_fn(mcfg)
         self._prefill = _prefill_fn(mcfg, max_len)
+        self._paged_decode = paged_kv.paged_decode_fn(mcfg) if self.paged \
+            else None
         self.stats = {"decode_steps": 0, "prefills": 0,
-                      "tokens_out": 0, "slot_occupancy": []}
+                      "tokens_out": 0, "slot_occupancy": [],
+                      "preemptions": 0, "rejected": 0}
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, req: Request) -> None:
+        if req.t_submit is None:
+            req.t_submit = time.monotonic()
         self.queue.append(req)
 
+    def _slot_pos(self, b: int) -> int:
+        """Cache length of slot b = prompt + decoded-in KV.  The newest
+        sampled token is in out_tokens but its KV has not been written
+        yet (that happens on its decode step), hence the -1."""
+        req = self.slots[b]
+        return len(req.prompt) + len(req.out_tokens) - 1
+
+    def _finish(self, b: int, reason: str) -> None:
+        req = self.slots[b]
+        req.done = True
+        if req.finish_reason is None:
+            req.finish_reason = reason
+        req.t_done = time.monotonic()
+        self.slots[b] = None
+        if self.paged:
+            self.pool.release(b)
+
+    def _preempt(self, b: int) -> None:
+        """Evict slot b under page pressure: free its pages and requeue
+        it at the front; a later admission re-prefills prompt+output and
+        resumes decoding where it stopped."""
+        req = self.slots[b]
+        self.slots[b] = None
+        self.pool.release(b)
+        self.queue.insert(0, req)
+        self.stats["preemptions"] += 1
+
     def _admit(self) -> None:
-        """Prefill queued requests into free slots (continuous batching)."""
+        """Prefill queued requests into free slots (continuous batching).
+        Prompts that could never decode a single token inside the cache
+        are rejected up front instead of silently overrunning the slot."""
         for b in range(self.max_batch):
             if self.slots[b] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
-            toks = jnp.asarray(req.prompt[None, :], jnp.int32)
-            last, cache1 = self._prefill(self.params, toks)
-            idx_vec = self.cache["index"]
-            self.cache = _tree_set_slot(self.cache, cache1, b)
-            self.cache["index"] = idx_vec.at[b].set(len(req.prompt))
+            req = self.queue[0]
+            resumed = bool(req.out_tokens)
+            if resumed:
+                # re-prefill everything but the newest token (whose KV
+                # would have been written by its decode step)
+                seq = np.concatenate([
+                    np.asarray(req.prompt, np.int32),
+                    np.asarray(req.out_tokens[:-1], np.int32)])
+            else:
+                seq = np.asarray(req.prompt, np.int32)
+            plen = len(seq)
+            if plen < 1 or plen >= self.capacity:
+                self.queue.pop(0)
+                req.done = True
+                req.finish_reason = "rejected"
+                req.t_done = time.monotonic()
+                self.stats["rejected"] += 1
+                continue
+            if self.paged:
+                # +1: the next decode writes KV at position plen
+                if not self.pool.ensure(b, plen + 1):
+                    break       # pool dry — wait for decode-side frees
+                last = self._paged_prefill(b, seq)
+            else:
+                toks = jnp.asarray(seq[None, :], jnp.int32)
+                last, cache1 = self._prefill(self.params, toks)
+                idx_vec = self.cache["index"]
+                self.cache = _tree_set_slot(self.cache, cache1, b)
+                self.cache["index"] = idx_vec.at[b].set(plen)
+            self.queue.pop(0)
             self.slots[b] = req
+            req.admit_seq = self._admit_counter
+            self._admit_counter += 1
+            self.stats["prefills"] += 1
+            if resumed:
+                self.next_token[b, 0] = req.out_tokens[-1]
+                continue
             self.key, k = jax.random.split(self.key)
             tok = int(sample(last[0, -1:], k,
                              temperature=req.temperature)[0])
             req.out_tokens.append(tok)
+            if req.t_first is None:
+                req.t_first = time.monotonic()
             self.next_token[b, 0] = tok
-            self.stats["prefills"] += 1
             self.stats["tokens_out"] += 1
             if len(req.out_tokens) >= req.max_new_tokens or \
                     tok == self.eos_id:
-                req.done = True          # budget spent at admission —
-                self.slots[b] = None     # never decode past max_new
+                # budget spent at admission — never decode past max_new
+                self._finish(b, "eos" if tok == self.eos_id
+                             else "max_new_tokens")
+
+    def _paged_prefill(self, b: int, seq: np.ndarray):
+        """Bucket-padded prefill of `seq` into slot b's pages; returns
+        the (1, 1, V) last-real-token logits."""
+        plen = len(seq)
+        bucket = paged_kv.bucket_for(plen, self.buckets)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = seq
+        fn = paged_kv.paged_prefill_fn(self.mcfg, bucket, self.pool.page_size)
+        trow = self.pool.table_row(b, bucket // self.pool.page_size)
+        last, self.pool.segments = fn(
+            self.params, toks, plen, self.pool.segments, trow)
+        self.pool.index[b] = plen
+        return last
 
     def _select_active(self, all_active: list[int]) -> list[int]:
         """Pick up to decode_batch slots in slot-id rotation.  The cursor
@@ -201,11 +343,21 @@ class ServingEngine:
     def step(self) -> int:
         """One lock-step decode over active slots; returns #active."""
         self._admit()
-        all_active = [b for b, r in enumerate(self.slots) if r is not None]
-        if not all_active:
+        live = [b for b, r in enumerate(self.slots) if r is not None]
+        # cache-boundary: a slot whose next KV write would land at or past
+        # capacity finishes NOW instead of silently overrunning the slot
+        for b in list(live):
+            if self._slot_pos(b) >= self.capacity:
+                self._finish(b, "length")
+                live.remove(b)
+        if self.paged:
+            live = self._grow_pages(live)
+        if not live:
             return 0
-        active = self._select_active(all_active)
-        if self.compact and self.decode_batch < self.max_batch:
+        active = self._select_active(live)
+        if self.paged:
+            logits, lane = self._paged_step(active)
+        elif self.compact and self.decode_batch < self.max_batch:
             # compacted sub-batch decode: gather the active slots' cache
             # slices, decode at static width decode_batch, scatter back.
             # Padding lanes (fewer active than decode_batch) repeat the
@@ -217,7 +369,7 @@ class ServingEngine:
             logits, new_sub = self._decode(
                 self.params, jnp.asarray(self.next_token[sel]), sub)
             self.cache = _SCATTER(self.cache, new_sub, sel_arr)
-            lane: dict[int, int] = {}
+            lane = {}
             for j, b in enumerate(sel):
                 lane.setdefault(b, j)
         else:
@@ -225,18 +377,17 @@ class ServingEngine:
                 self.params, jnp.asarray(self.next_token), self.cache)
             self.cache = new_cache
             # full-width decode advanced every slot; slots not advancing
-            # this step must not advance their cache index
+            # this step must not advance their cache index (one batched
+            # scatter-add, not a per-slot dispatch loop)
             inactive = [b for b in range(self.max_batch)
                         if b not in active]
             if inactive:
-                idx = self.cache["index"]
-                for b in inactive:
-                    idx = idx.at[b].add(-1)
-                self.cache["index"] = idx
+                self.cache["index"] = _rewind_inactive(
+                    self.cache["index"], inactive)
             lane = {b: b for b in active}
         self.stats["decode_steps"] += 1
         self.stats["slot_occupancy"].append(
-            len(all_active) / self.max_batch)
+            len(live) / self.max_batch)
         for b in active:
             req = self.slots[b]
             self.key, k = jax.random.split(self.key)
@@ -247,9 +398,46 @@ class ServingEngine:
             self.stats["tokens_out"] += 1
             if len(req.out_tokens) >= req.max_new_tokens or \
                     tok == self.eos_id:
-                req.done = True
-                self.slots[b] = None
+                self._finish(b, "eos" if tok == self.eos_id
+                             else "max_new_tokens")
         return len(active)
+
+    def _grow_pages(self, live: list[int]) -> list[int]:
+        """Make every live slot's next KV write backed by a page,
+        preempting the youngest-admitted slot under pool pressure; a lone
+        slot that exhausts the pool finishes with reason "capacity"."""
+        for b in list(live):
+            while b in live and \
+                    not self.pool.ensure(b, self._slot_pos(b) + 1):
+                victims = [v for v in live if v != b]
+                if not victims:
+                    self._finish(b, "capacity")
+                    live.remove(b)
+                else:
+                    v = max(victims,
+                            key=lambda s: self.slots[s].admit_seq)
+                    self._preempt(v)
+                    live.remove(v)
+        return live
+
+    def _paged_step(self, active: list[int]):
+        """One gathered decode over the page pool at a fixed lane width
+        (decode_batch when compacting, max_batch for the full-width
+        emulation) — a single executable either way."""
+        width = self.decode_batch if self.compact else self.max_batch
+        sel = active + [active[0]] * (width - len(active))
+        tables_sel = self.pool.tables[np.asarray(sel)]
+        index_sel = self.pool.index[np.asarray(sel)]
+        logits, self.pool.segments = self._paged_decode(
+            self.params, jnp.asarray(self.next_token[sel]),
+            self.pool.segments, tables_sel, index_sel)
+        # page-table bookkeeping is host-side numpy: advance the lengths
+        # here instead of round-tripping them through the device
+        self.pool.index[np.asarray(active)] += 1
+        lane: dict[int, int] = {}
+        for j, b in enumerate(sel):
+            lane.setdefault(b, j)
+        return logits, lane
 
     def run(self, max_steps: int = 10_000) -> None:
         steps = 0

@@ -1,0 +1,236 @@
+"""Block-paged KV cache + bucketed prefill for the serving engine.
+
+The dense engine reserves a `(max_batch, max_len)` KV rectangle per slot
+and compiles a fresh prefill executable for every distinct prompt
+length.  This module replaces both:
+
+* **Pages** — KV lives in per-layer pools of fixed-size pages
+  (`models.api.init_paged_cache`); each slot owns a list of physical
+  pages recorded in a per-slot page table, so HBM holds live tokens, not
+  rectangles.  Page 0 is a reserved null page: every unused table entry
+  points at it and its contents are never read (attention masks by
+  per-slot length).  Allocation/free is host-side free-list accounting
+  (`PagePool`), cheap and exact.
+* **Bucketed prefill** — prompts are right-padded to the next
+  power-of-two bucket, so an arbitrary prompt mix compiles at most
+  `len(prefill_buckets(...))` prefill executables.  Causal attention
+  makes the padding exact: positions `< plen` never attend to the pad
+  tail, and the pad tail's garbage KV is overwritten by decode before
+  its position becomes visible.
+
+Decode gathers the selected slots' pages into the dense `(n, C, ...)`
+layout `transformer.decode_step` already understands, runs the unchanged
+decode math, and scatters the advanced pages back — so paged decode is
+bit-identical to the dense cache path.  Page tables and per-slot lengths
+live as host `numpy` arrays and enter the jitted functions as plain
+array arguments: every step passes the same shapes, so steady-state
+serving dispatches zero fresh compiles no matter how tables churn.  The
+jitted builders are module-level and `lru_cache`'d per config, so
+engines sharing a config reuse one trace cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api, transformer
+from repro.models.config import ModelConfig
+
+
+def prefill_buckets(max_len: int, min_bucket: int = 16) -> tuple[int, ...]:
+    """Power-of-two prompt-length buckets: `min_bucket, 2*min_bucket, ...`
+    up to the first bucket that covers `max_len - 1` (prompts of
+    `max_len` or longer are rejected at admission — decode needs at
+    least one free position)."""
+    b = 1 << max(0, int(min_bucket) - 1).bit_length()
+    if b < 1:
+        b = 1
+    out = [b]
+    while out[-1] < max_len - 1:
+        out.append(out[-1] * 2)
+    return tuple(out)
+
+
+def bucket_for(plen: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket that holds a `plen`-token prompt."""
+    for b in buckets:
+        if plen <= b:
+            return b
+    raise ValueError(f"prompt of {plen} tokens exceeds the largest bucket {buckets[-1]}")
+
+
+class PagePool:
+    """Fixed-size KV pages with per-slot page tables and host-side
+    free-list accounting.  Not thread-safe: the serving engine is the
+    single writer."""
+
+    def __init__(
+        self,
+        mcfg: ModelConfig,
+        max_batch: int,
+        max_len: int,
+        *,
+        page_size: int = 16,
+        num_pages: int | None = None,
+        dtype=None,
+    ):
+        if page_size < 1 or page_size & (page_size - 1):
+            raise ValueError(f"page_size must be a power of two, got {page_size}")
+        self.page_size = page_size
+        self.max_batch = max_batch
+        self.pages_per_slot = -(-max_len // page_size)
+        # default: capacity parity with the dense cache (+1 null page);
+        # pass a smaller num_pages to trade capacity for density — the
+        # engine preempts under pressure instead of overflowing
+        self.num_pages = num_pages or 1 + max_batch * self.pages_per_slot
+        if self.num_pages < 2:
+            raise ValueError("need at least one allocatable page beyond the null page")
+        self.segments = api.init_paged_cache(mcfg, self.num_pages, page_size, dtype)
+        # tables/index are HOST state (numpy): they enter jitted code as
+        # ordinary array arguments, never as baked-in constants, so page
+        # churn can't mint fresh executables
+        self.tables = np.zeros((max_batch, self.pages_per_slot), np.int32)
+        self.index = np.zeros((max_batch,), np.int32)
+        self._free = list(range(self.num_pages - 1, 0, -1))  # pop() allocates ascending
+        self._owned: list[list[int]] = [[] for _ in range(max_batch)]
+        self.stats = {"page_allocs": 0, "page_frees": 0, "peak_pages_in_use": 0}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def owned(self, b: int) -> tuple[int, ...]:
+        return tuple(self._owned[b])
+
+    def ensure(self, b: int, n_tokens: int) -> bool:
+        """Grow slot `b` to hold `n_tokens`; False if the free list is
+        short (caller preempts or waits).  Never partially allocates."""
+        need = self.pages_for(n_tokens)
+        have = len(self._owned[b])
+        if need <= have:
+            return True
+        if need - have > len(self._free) or need > self.pages_per_slot:
+            return False
+        fresh = [self._free.pop() for _ in range(need - have)]
+        self._owned[b].extend(fresh)
+        self.tables[b, have:need] = fresh
+        self.stats["page_allocs"] += len(fresh)
+        self.stats["peak_pages_in_use"] = max(self.stats["peak_pages_in_use"], self.pages_in_use)
+        return True
+
+    def release(self, b: int) -> None:
+        """Return slot `b`'s pages to the free list and null its table."""
+        pages = self._owned[b]
+        if pages:
+            self.stats["page_frees"] += len(pages)
+            self._free.extend(reversed(pages))
+            self._owned[b] = []
+            self.tables[b] = 0
+        self.index[b] = 0
+
+    def table_row(self, b: int, n_entries: int) -> np.ndarray:
+        """The first `n_entries` table entries of slot `b` (null-padded) —
+        the bucket-sized view a padded prefill scatters through."""
+        row = (self._owned[b] + [0] * n_entries)[:n_entries]
+        return np.asarray(row, np.int32)
+
+
+def _gather_pages(segments, tables_sel):
+    """Pool pages -> the dense (n, C, ...) cache layout, via per-slot
+    tables.  tables_sel: (n, pages_per_slot) physical page ids."""
+    n, npp = tables_sel.shape
+
+    def leaf(a):  # (L, P, ps, ...)
+        g = jnp.take(a, tables_sel, axis=1)  # (L, n, npp, ps, ...)
+        return g.reshape(a.shape[0], n, npp * a.shape[2], *a.shape[3:])
+
+    return jax.tree.map(leaf, segments)
+
+
+def _scatter_pages(segments, dense, tables_sel):
+    """Write an advanced dense sub-cache back through the page tables.
+    Duplicate physical ids only occur for padding lanes (identical
+    content) and the never-read null page, so scatter order is
+    irrelevant."""
+    n, npp = tables_sel.shape
+
+    def leaf(a, d):  # a: (L, P, ps, ...); d: (L, n, C, ...)
+        dp = d.reshape(a.shape[0], n, npp, a.shape[2], *a.shape[3:])
+        return a.at[:, tables_sel].set(dp.astype(a.dtype))
+
+    return jax.tree.map(leaf, segments, dense)
+
+
+@functools.lru_cache(maxsize=8)
+def paged_decode_fn(mcfg: ModelConfig):
+    """Jitted gather -> decode -> scatter over the page pool.  One
+    executable per (config, selection width); the pool buffers are
+    donated so the scatter updates in place.  Slot lengths advance on the
+    host (the caller knows exactly which slots stepped), so only logits
+    and the pool round-trip the device."""
+
+    def fn(params, tokens, segments, tables_sel, index_sel):
+        dense = _gather_pages(segments, tables_sel)
+        logits, new = api.decode_step(
+            mcfg, params, tokens, {"segments": dense, "index": index_sel}
+        )
+        return logits, _scatter_pages(segments, new["segments"], tables_sel)
+
+    return jax.jit(fn, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=32)
+def paged_prefill_fn(mcfg: ModelConfig, bucket: int, page_size: int):
+    """Jitted padded prefill + page scatter for one bucket length.  The
+    prompt arrives right-padded to `bucket`; `plen` (traced) selects the
+    real last-token logits, and the prompt's KV lands in the pages named
+    by `table_row`.  Pad positions `>= plen` write garbage into the tail
+    of the last real page (overwritten by decode before ever unmasked)
+    and into the null page (never read)."""
+    if bucket % page_size:
+        raise ValueError(f"bucket {bucket} is not a multiple of page_size {page_size}")
+    npp_b = bucket // page_size
+
+    def fn(params, toks, plen, segments, table_row):
+        logits, _, kvs = transformer.forward(mcfg, params, toks, collect_kv=True)
+        last = jax.lax.dynamic_slice_in_dim(logits, plen - 1, 1, axis=1)
+
+        def leaf(a, kv):  # a: (L, P, ps, ...); kv: (L, 1, bucket, ...)
+            pages = kv[:, 0].reshape(a.shape[0], npp_b, page_size, *kv.shape[3:])
+            return a.at[:, table_row].set(pages.astype(a.dtype))
+
+        new_segs = []
+        for seg_kv, seg_pool in zip(kvs, segments):
+            if mcfg.use_mla:
+                kv_tree = {"latent": seg_kv[0]}
+            else:
+                kv_tree = {"k": seg_kv[0], "v": seg_kv[1]}
+            new_segs.append(jax.tree.map(leaf, seg_pool, kv_tree))
+        return last, new_segs
+
+    return jax.jit(fn, donate_argnums=(3,))
+
+
+def paged_supported(mcfg: ModelConfig) -> bool:
+    """Paged + bucketed serving is exact only where the gather/bucket
+    assumptions hold: the transformer cache layout, no sliding-window
+    ring (pages map positions, not ring slots), and no MoE (pad tokens
+    would consume router capacity and perturb real tokens)."""
+    return mcfg.family == "transformer" and not mcfg.window and not mcfg.use_moe
+
+
+def pool_token_capacity(pool: PagePool, max_len: int) -> int:
+    """Hard per-slot token ceiling: the engine finishes a request at this
+    boundary instead of overrunning its pages."""
+    return min(max_len, pool.pages_per_slot * pool.page_size)

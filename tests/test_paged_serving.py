@@ -1,0 +1,393 @@
+"""Tier-1 tests for the block-paged KV cache + bucketed prefill.
+
+Covers the ISSUE-7 acceptance surface: page lifecycle (alloc/free under
+churn, preemption, the reserved null page), bucket-boundary prefill
+parity (prompt lengths at bucket, bucket-1, bucket+1), paged-vs-dense
+decode bit-parity on fixed seeds, the CompileMonitor-verified prefill
+executable budget over a mixed prompt-length run, the cache-boundary
+admission/decode bugfixes, and the paged-attention kernel triplet.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.serving import paged as paged_mod
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.paged import PagePool, bucket_for, prefill_buckets
+
+TINY = ModelConfig(
+    name="tiny-paged",
+    n_layers=2,
+    d_model=32,
+    n_heads=4,
+    kv_heads=2,
+    head_dim=8,
+    d_ff=64,
+    vocab=61,
+    dtype="float32",
+    param_dtype="float32",
+    scan_layers=False,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return api.init_params(TINY, jax.random.PRNGKey(0))
+
+
+def _prompt(rng, n):
+    return rng.integers(1, TINY.vocab - 1, size=n).astype(np.int32)
+
+
+def _run_engine(params, prompts, *, max_new=8, **kw):
+    eng = ServingEngine(TINY, params, **kw)
+    reqs = [
+        Request(rid=i, prompt=p, max_new_tokens=max_new) for i, p in enumerate(prompts)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return eng, reqs
+
+
+# -- bucket math --------------------------------------------------------------
+
+
+def test_prefill_buckets_cover_admissible_lengths():
+    buckets = prefill_buckets(512, 16)
+    assert buckets == (16, 32, 64, 128, 256, 512)
+    assert prefill_buckets(64, 16) == (16, 32, 64)
+    # a non-power-of-two max_len is covered by the next bucket up
+    assert prefill_buckets(100, 16)[-1] >= 99
+    for plen in (1, 16, 17, 99):
+        assert bucket_for(plen, prefill_buckets(100, 16)) >= plen
+    with pytest.raises(ValueError):
+        bucket_for(1000, prefill_buckets(64, 16))
+
+
+# -- page pool lifecycle ------------------------------------------------------
+
+
+def test_page_pool_alloc_free_churn():
+    pool = PagePool(TINY, max_batch=4, max_len=64, page_size=16)
+    total = pool.num_pages - 1  # page 0 is the reserved null page
+    assert pool.free_pages == total
+    assert pool.ensure(0, 20)  # 2 pages
+    assert pool.ensure(1, 16)  # 1 page
+    assert pool.owned(0) != pool.owned(1)
+    assert 0 not in pool.owned(0) and 0 not in pool.owned(1)
+    assert pool.free_pages == total - 3
+    # growth is incremental and idempotent
+    assert pool.ensure(0, 21)
+    assert pool.ensure(0, 33)
+    assert len(pool.owned(0)) == 3
+    # table rows mirror ownership, null-padded to the requested width
+    row = pool.table_row(0, 4)
+    assert tuple(row[:3]) == pool.owned(0) and row[3] == 0
+    pool.release(0)
+    assert pool.free_pages == total - 1
+    assert pool.owned(0) == () and not pool.tables[0].any()
+    # churn: repeated alloc/release cycles conserve the pool exactly
+    for i in range(25):
+        b = i % 4
+        assert pool.ensure(b, 1 + (i * 7) % 60)
+        pool.release(b)
+    pool.release(1)
+    assert pool.free_pages == total
+    assert pool.stats["page_allocs"] == pool.stats["page_frees"]
+    assert pool.stats["peak_pages_in_use"] <= total
+
+
+def test_page_pool_exhaustion_is_atomic():
+    pool = PagePool(TINY, max_batch=2, max_len=64, page_size=16, num_pages=4)
+    assert pool.ensure(0, 32)  # 2 of 3 usable pages
+    free_before = pool.free_pages
+    assert not pool.ensure(1, 32)  # needs 2, only 1 left: no partial alloc
+    assert pool.free_pages == free_before and pool.owned(1) == ()
+    assert pool.ensure(1, 16)
+    with pytest.raises(ValueError):
+        PagePool(TINY, max_batch=1, max_len=64, page_size=24)
+
+
+def test_eviction_under_churn_frees_every_page(tiny_params):
+    """A pool far too small for the offered load forces preemptions; all
+    requests still finish and every page returns to the free list."""
+    rng = np.random.default_rng(3)
+    prompts = [_prompt(rng, n) for n in (20, 30, 25, 18, 22, 27)]
+    eng, reqs = _run_engine(
+        tiny_params,
+        prompts,
+        max_new=16,
+        max_batch=4,
+        max_len=64,
+        paged=True,
+        page_size=16,
+        num_pages=9,
+    )
+    assert all(r.done for r in reqs)
+    assert all(len(r.out_tokens) == 16 for r in reqs)
+    assert eng.stats["preemptions"] > 0
+    assert eng.pool.free_pages == eng.pool.num_pages - 1
+    assert eng.pool.stats["page_allocs"] == eng.pool.stats["page_frees"]
+
+
+def test_lone_request_exhausting_pool_finishes_with_capacity(tiny_params):
+    eng = ServingEngine(
+        TINY, tiny_params, max_batch=1, max_len=512, paged=True, page_size=16, num_pages=3
+    )
+    req = Request(rid=0, prompt=np.arange(1, 11, dtype=np.int32), max_new_tokens=400)
+    eng.submit(req)
+    eng.run()
+    assert req.done and req.finish_reason == "capacity"
+    # 2 usable pages = 32 positions; prompt used 10
+    assert len(req.out_tokens) == 32 - 10 + 1
+
+
+# -- parity against the dense cache -------------------------------------------
+
+
+@pytest.mark.parametrize("delta", [-1, 0, 1])
+def test_bucket_boundary_prefill_parity(tiny_params, delta):
+    """Prompt lengths straddling a bucket edge (bucket-1, bucket, and
+    bucket+1, which spills into the next bucket) emit exactly the dense
+    engine's tokens."""
+    bucket = 16
+    rng = np.random.default_rng(40 + delta)
+    prompts = [_prompt(rng, bucket + delta)]
+    kw = dict(max_new=8, max_batch=2, max_len=64)
+    _, dense = _run_engine(tiny_params, prompts, paged=False, **kw)
+    _, paged = _run_engine(tiny_params, prompts, paged=True, **kw)
+    assert [r.out_tokens for r in paged] == [r.out_tokens for r in dense]
+
+
+@pytest.mark.parametrize("compact", [True, False])
+def test_paged_matches_dense_on_fixed_seed_mix(tiny_params, compact):
+    """Fixed-seed bit-parity over a mixed-length workload with admission
+    churn, in both the compacted and full-width-emulation schedules."""
+    rng = np.random.default_rng(7)
+    prompts = [_prompt(rng, n) for n in (5, 17, 33, 9, 21, 40, 2, 13)]
+    kw = dict(max_new=10, max_batch=4, max_len=64, decode_batch=2, compact=compact)
+    _, dense = _run_engine(tiny_params, prompts, paged=False, **kw)
+    _, paged = _run_engine(tiny_params, prompts, paged=True, **kw)
+    assert [r.out_tokens for r in paged] == [r.out_tokens for r in dense]
+    assert [r.finish_reason for r in paged] == [r.finish_reason for r in dense]
+
+
+def test_paged_decode_gather_is_bit_identical(tiny_params):
+    """The decode path (gather -> decode_step -> scatter) is BIT-exact
+    against the dense cache, not just token-exact: copy one dense cache
+    into pool pages by hand and compare the decode logits bitwise."""
+    from repro.serving.engine import _decode_fn
+    from repro.serving.paged import paged_decode_fn
+
+    rng = np.random.default_rng(11)
+    max_len, bsz = 64, 2
+    toks = jnp.asarray(np.stack([_prompt(rng, 33), _prompt(rng, 33)]))
+    _, cache = api.prefill(TINY, tiny_params, {"tokens": toks}, max_len)
+    index = np.asarray([33, 33], np.int32)
+    cache = {"segments": cache["segments"], "index": jnp.asarray(index)}
+    pool = PagePool(TINY, max_batch=bsz, max_len=max_len, page_size=16)
+    ps = pool.page_size
+    for b in range(bsz):
+        assert pool.ensure(b, 34)
+        pool.index[b] = 33
+    new_segs = []
+    for seg_d, seg_p in zip(cache["segments"], pool.segments):
+
+        def place(pages, dense):
+            out = np.asarray(pages).copy()
+            for b in range(bsz):
+                for j, pg in enumerate(pool.owned(b)):
+                    out[:, pg] = dense[:, b, j * ps : (j + 1) * ps]
+            return jnp.asarray(out)
+
+        new_segs.append(jax.tree.map(place, seg_p, seg_d))
+    pool.segments = new_segs
+    tok = jnp.asarray([[7], [9]], jnp.int32)
+    sel = np.asarray([0, 1])
+    logits_d, _ = _decode_fn(TINY)(tiny_params, tok, cache)
+    logits_p, _ = paged_decode_fn(TINY)(
+        tiny_params, tok, pool.segments, pool.tables[sel], pool.index[sel]
+    )
+    np.testing.assert_array_equal(np.asarray(logits_d), np.asarray(logits_p))
+
+
+# -- compile budget -----------------------------------------------------------
+
+
+def test_prefill_executable_budget_over_mixed_lengths(tiny_params):
+    """CompileMonitor-verified: once each bucket has been seen once, a
+    mixed run over MANY distinct prompt lengths compiles NOTHING — i.e.
+    the whole admissible length space needs at most len(buckets) prefill
+    executables (plus one decode executable)."""
+    from tools.mozart_check.tracecheck import CompileMonitor
+
+    rng = np.random.default_rng(13)
+    eng = ServingEngine(
+        TINY, tiny_params, max_batch=4, max_len=64, decode_batch=2, paged=True
+    )
+    assert eng.buckets == (16, 32, 64)
+    # warm exactly one prompt per bucket
+    for i, n in enumerate((5, 20, 40)):
+        eng.submit(Request(rid=i, prompt=_prompt(rng, n), max_new_tokens=4))
+    eng.run()
+    with CompileMonitor() as mon:
+        for i, n in enumerate((3, 7, 11, 19, 23, 37, 50, 61, 13, 29)):
+            eng.submit(Request(rid=100 + i, prompt=_prompt(rng, n), max_new_tokens=4))
+        eng.run()
+    assert mon.count == 0, mon.events
+
+
+# -- cache-boundary bugfix regressions ----------------------------------------
+
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_admit_rejects_prompts_at_or_past_capacity(tiny_params, paged):
+    """Regression (ISSUE 7): prompts with len(prompt) >= max_len used to
+    prefill anyway and decode past the end of the slot."""
+    rng = np.random.default_rng(17)
+    too_long = Request(rid=0, prompt=_prompt(rng, 32), max_new_tokens=4)
+    way_too_long = Request(rid=1, prompt=_prompt(rng, 50), max_new_tokens=4)
+    fits = Request(rid=2, prompt=_prompt(rng, 8), max_new_tokens=4)
+    eng = ServingEngine(TINY, tiny_params, max_batch=2, max_len=32, paged=paged)
+    for r in (too_long, way_too_long, fits):
+        eng.submit(r)
+    eng.run()
+    assert too_long.done and too_long.finish_reason == "rejected"
+    assert way_too_long.finish_reason == "rejected"
+    assert too_long.out_tokens == [] and way_too_long.out_tokens == []
+    assert fits.finish_reason == "max_new_tokens" and len(fits.out_tokens) == 4
+    assert eng.stats["rejected"] == 2
+
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_decode_finishes_at_cache_boundary(tiny_params, paged):
+    """Regression (ISSUE 7): a generous max_new_tokens used to decode
+    past max_len, silently overwriting the slot's last cache position."""
+    rng = np.random.default_rng(19)
+    req = Request(rid=0, prompt=_prompt(rng, 28), max_new_tokens=100)
+    eng = ServingEngine(TINY, tiny_params, max_batch=2, max_len=32, paged=paged)
+    eng.submit(req)
+    eng.run()
+    assert req.done and req.finish_reason == "length"
+    # positions 28..31 hold decoded KV; the +1 token's KV was never written
+    assert len(req.out_tokens) == 32 - 28 + 1
+
+
+def test_timing_marks_are_monotone(tiny_params):
+    rng = np.random.default_rng(23)
+    _, reqs = _run_engine(
+        tiny_params, [_prompt(rng, 9)], max_new=4, max_batch=2, max_len=32, paged=True
+    )
+    (req,) = reqs
+    assert req.t_submit is not None and req.t_first is not None
+    assert req.t_submit <= req.t_first <= req.t_done
+
+
+# -- paged-attention kernel triplet -------------------------------------------
+
+
+@pytest.mark.parametrize("group", [1, 4])
+def test_paged_decode_attention_matches_ref(group):
+    from repro.kernels.flash_attention.ops import paged_decode_attention
+    from repro.kernels.flash_attention.ref import paged_decode_attention_ref
+
+    rng = np.random.default_rng(29)
+    bsz, hkv, hd, pages, ps, npp = 4, 2, 16, 11, 8, 4
+    h = hkv * group
+    q = jnp.asarray(rng.normal(size=(bsz, 1, h, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(pages, ps, hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(pages, ps, hkv, hd)), jnp.float32)
+    tables = np.zeros((bsz, npp), np.int32)
+    perm = rng.permutation(np.arange(1, pages))
+    lens = np.asarray([5, 8, 17, 30], np.int32)
+    off = 0
+    for b in range(bsz):
+        n = -(-int(lens[b]) // ps)
+        tables[b, :n] = perm[off : off + n]
+        off += n
+    want = paged_decode_attention_ref(q, kp, vp, jnp.asarray(tables), jnp.asarray(lens))
+    got = paged_decode_attention(q, kp, vp, jnp.asarray(tables), jnp.asarray(lens))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_attention_ignores_null_and_stale_pages():
+    """Garbage in the null page and in positions past `lengths` must not
+    leak into the output: poisoning them leaves the result unchanged."""
+    from repro.kernels.flash_attention.ops import paged_decode_attention
+
+    rng = np.random.default_rng(31)
+    bsz, h, hd, pages, ps, npp = 2, 2, 8, 6, 4, 3
+    q = jnp.asarray(rng.normal(size=(bsz, 1, h, hd)), jnp.float32)
+    kp = np.asarray(rng.normal(size=(pages, ps, h, hd)), np.float32)
+    vp = np.asarray(rng.normal(size=(pages, ps, h, hd)), np.float32)
+    tables = jnp.asarray([[1, 2, 0], [3, 0, 0]], jnp.int32)
+    lens = jnp.asarray([6, 3], jnp.int32)
+    base = paged_decode_attention(q, jnp.asarray(kp), jnp.asarray(vp), tables, lens)
+    kp2, vp2 = kp.copy(), vp.copy()
+    kp2[0], vp2[0] = 1e6, 1e6  # null page
+    kp2[2, 2:], vp2[2, 2:] = -1e6, -1e6  # positions 6,7 of slot 0 (past length)
+    kp2[3, 3:], vp2[3, 3:] = 1e6, -1e6  # position 3 of slot 1 (past length)
+    got = paged_decode_attention(q, jnp.asarray(kp2), jnp.asarray(vp2), tables, lens)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+def test_models_api_paged_cache_is_transformer_only():
+    pool = api.init_paged_cache(TINY, num_pages=4, page_size=8)
+    for seg in pool:
+        assert seg["k"].shape == (TINY.n_layers, 4, 8, TINY.kv_heads, TINY.hd)
+    rnn = ModelConfig(
+        name="tiny-rglru",
+        family="rglru",
+        n_layers=2,
+        d_model=32,
+        n_heads=2,
+        kv_heads=2,
+        head_dim=16,
+        d_ff=64,
+        vocab=61,
+        attn_every=2,
+        lru_width=32,
+    )
+    with pytest.raises(NotImplementedError):
+        api.init_paged_cache(rnn, num_pages=4, page_size=8)
+    eng = ServingEngine(rnn, params={}, max_batch=2, max_len=16, paged=True)
+    assert eng.paged is False  # silent fallback to the dense cache
+
+
+def test_full_width_rewind_is_vectorized(tiny_params, monkeypatch):
+    """Regression (ISSUE 7): the full-width emulation used one
+    `.at[b].add(-1)` dispatch PER inactive slot; it must issue exactly
+    one batched rewind covering all inactive slots per decode step."""
+    from repro.serving import engine as eng_mod
+
+    rng = np.random.default_rng(37)
+    eng = ServingEngine(
+        TINY, tiny_params, max_batch=4, max_len=32, decode_batch=1, compact=False, paged=False
+    )
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=_prompt(rng, 4), max_new_tokens=3))
+    calls = []
+    orig = eng_mod._rewind_inactive
+
+    def spy(index, inactive):
+        calls.append(list(inactive))
+        return orig(index, inactive)
+
+    monkeypatch.setattr(eng_mod, "_rewind_inactive", spy)
+    steps = 0
+    while any(s is not None for s in eng.slots) or eng.queue:
+        before = len(calls)
+        eng.step()
+        steps += 1
+        assert len(calls) - before <= 1  # one batched rewind per step, max
+        if steps > 50:
+            raise AssertionError("engine did not drain")
+    # with decode_batch=1 the first full step rewinds THREE slots at once
+    assert any(len(c) == 3 for c in calls)
+    # and every request still decoded correctly
+    assert all(s is None for s in eng.slots)

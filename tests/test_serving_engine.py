@@ -43,6 +43,7 @@ def _stub_engine(max_batch=4, decode_batch=None, compact=True, vocab=61):
         max_len=16,
         decode_batch=decode_batch,
         compact=compact,
+        paged=False,  # the fakes replace the DENSE decode/prefill path
     )
 
     def fake_decode(params, tokens, cache):
