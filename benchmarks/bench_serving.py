@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.models import api
 from repro.models.config import ModelConfig
+from repro.serving import workload
 from repro.serving.engine import Request, ServingEngine
 from tools.mozart_check.tracecheck import CompileMonitor
 
@@ -80,24 +81,10 @@ def _requests(rng):
 
 def _mix_requests(rng, n):
     """Zipf-weighted short/medium/long prompt mix spanning every prefill
-    bucket of MAX_LEN=64 (16/32/64): short prompts dominate, but the
-    tail crosses both bucket boundaries."""
-    bands = ((4, 15), (17, 31), (33, 60))
-    weights = np.asarray([1.0, 1.0 / 2.0, 1.0 / 3.0])
-    weights = weights / weights.sum()
-    reqs = []
-    for i in range(n):
-        lo, hi = bands[int(rng.choice(len(bands), p=weights))]
-        reqs.append(
-            Request(
-                rid=i,
-                prompt=rng.integers(0, CFG.vocab, size=int(rng.integers(lo, hi + 1))).astype(
-                    np.int32
-                ),
-                max_new_tokens=MAX_NEW,
-            )
-        )
-    return reqs
+    bucket of MAX_LEN=64 (16/32/64) — the shared seeded generator in
+    `serving.workload` (same draw order, so fixed-seed traces from
+    before the hoist replay unchanged)."""
+    return workload.zipf_mix_requests(rng, n, CFG.vocab, max_new_tokens=MAX_NEW)
 
 
 def _run_mix(params, *, paged):

@@ -21,7 +21,12 @@ nonzero on any regression:
     the prompt-length-mix workload must stay inside the paged engine's
     recompile budget (len(prefill_buckets)+1 executables) with paged
     tokens matching the dense cache, and the mix's TTFT/TPOT p50/p99
-    must stay under the (deliberately loose) latency ceilings.
+    must stay under the (deliberately loose) latency ceilings;
+  * cluster — the multi-replica cluster must beat the single replica on
+    MEASURED aggregate tokens/s (equal per-request token counts,
+    >= min_speedup_multi), the int8 KV cache must hold token-level
+    parity and >= 2x pages per HBM byte, and the open-loop Poisson
+    drive's aggregate p99 TTFT/TPOT must stay under their ceilings.
 
 Usage: PYTHONPATH=src python -m benchmarks.compare [--dir DIR]
        [--baseline benchmarks/baselines.json]
@@ -175,6 +180,69 @@ def check(bench_dir: str, baselines: dict) -> list[str]:
                     f"baseline {float(limit):.1f}ms")
             else:
                 print(f"OK serving: {key} {float(val):.1f}ms <= "
+                      f"{float(limit):.1f}ms")
+
+    path = os.path.join(bench_dir, "BENCH_cluster.json")
+    blob = _load(path)
+    base = baselines.get("cluster", {})
+    if blob is None:
+        failures.append(f"missing artifact: {path}")
+    else:
+        # the scale-out gate is on MEASURED aggregate throughput (the
+        # ROADMAP's parquet-aggregator lesson: never gate on worker or
+        # replica count) with equal per-request token counts, so the
+        # multi-replica run cannot "win" by doing different work
+        min_speedup = float(base.get("min_speedup_multi", 1.0))
+        speedup = float(blob.get("speedup_multi_vs_single", 0.0))
+        if speedup < min_speedup:
+            failures.append(
+                f"cluster scale-out throughput regressed: "
+                f"{speedup:.2f}x < baseline {min_speedup:.2f}x")
+        else:
+            print(f"OK cluster: {blob.get('n_replicas')}-replica "
+                  f"aggregate {speedup:.2f}x >= {min_speedup:.2f}x vs "
+                  f"single-replica")
+        if base.get("require_equal_tokens", False) and \
+                not blob.get("equal_tokens", False):
+            failures.append(
+                "cluster: multi-replica run no longer emits the same "
+                "per-request token counts as the single replica")
+        min_match = base.get("min_quant_token_match")
+        if min_match is not None:
+            match = float(blob.get("quant_token_match_frac", 0.0))
+            if match < float(min_match):
+                failures.append(
+                    f"cluster: int8-KV token match {match:.3f} < "
+                    f"baseline {float(min_match):.3f}")
+            else:
+                print(f"OK cluster: int8-KV token match {match:.3f} >= "
+                      f"{float(min_match):.3f}")
+        min_cap = base.get("min_quant_capacity_ratio")
+        if min_cap is not None:
+            cap = float(blob.get("quant_capacity_ratio", 0.0))
+            if cap < float(min_cap):
+                failures.append(
+                    f"cluster: int8-KV capacity ratio {cap:.2f}x < "
+                    f"baseline {float(min_cap):.2f}x")
+            else:
+                print(f"OK cluster: int8-KV holds {cap:.2f}x >= "
+                      f"{float(min_cap):.2f}x pages per HBM byte")
+        for key, limit_key in (("ttft_p99_ms", "max_ttft_p99_ms"),
+                               ("tpot_p99_ms", "max_tpot_p99_ms")):
+            limit = base.get(limit_key)
+            if limit is None:
+                continue
+            val = blob.get(key)
+            if val is None:
+                failures.append(
+                    f"cluster: artifact lacks {key} — bench_cluster "
+                    f"must report open-loop latency percentiles")
+            elif float(val) > float(limit):
+                failures.append(
+                    f"cluster: {key} regressed: {float(val):.1f}ms > "
+                    f"baseline {float(limit):.1f}ms")
+            else:
+                print(f"OK cluster: {key} {float(val):.1f}ms <= "
                       f"{float(limit):.1f}ms")
     return failures
 

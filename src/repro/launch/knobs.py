@@ -84,6 +84,27 @@ KNOBS: tuple[Knob, ...] = (
         default="16",
         doc="smallest power-of-two prompt-length bucket padded prefills compile for",
     ),
+    Knob(
+        name="MOZART_KV_QUANT",
+        type="bool",
+        default="0",
+        doc="set to 1 to store paged KV pages as int8 with per-head scales "
+        "(~4x slots per HBM byte, token-level parity; paged engines only)",
+    ),
+    Knob(
+        name="MOZART_ROUTER",
+        type="str",
+        default="round_robin",
+        doc="cluster request-router policy: `round_robin`, `least_loaded` "
+        "(most free KV pages), or `shortest_queue` (join-shortest-queue)",
+    ),
+    Knob(
+        name="MOZART_REPLICAS",
+        type="int",
+        default="1",
+        doc="serving-cluster replica count when the caller does not pass one "
+        "(`serve --replicas` overrides)",
+    ),
 )
 
 _BY_NAME = {k.name: k for k in KNOBS}

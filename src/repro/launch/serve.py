@@ -17,6 +17,15 @@ norm_impl="fused"), the policy's batch split sets the engine's
 max/decode batch (decode runs COMPACTED at decode_batch width), and the
 TP degree builds the mesh the engine shards its params/cache/compute
 over.
+
+`--replicas N` (with `--router round_robin|least_loaded|shortest_queue`)
+scales the SAME policy out as a serving cluster: the policy's mesh keeps
+its "model" (TP) extent inside every replica while the replicas are laid
+out along the mesh "data" axis (`parallel.sharding.replica_meshes`), so
+`--policy X --replicas N` is the paper's fleet story — N copies of one
+composed BASIC behind a router, each with its own paged KV pool.
+`--rate R` drives the cluster open-loop at R req/s (Poisson, seeded)
+instead of the closed-loop burst.
 """
 from __future__ import annotations
 
@@ -117,6 +126,18 @@ def main() -> None:
     p.add_argument("--policy-network", default=None,
                    help="which network's policy to take from a "
                         "multi-network artifact")
+    p.add_argument("--replicas", type=int, default=None,
+                   help="serving-cluster replica count (default: the "
+                        "MOZART_REPLICAS knob); >1 maps replicas onto "
+                        "the mesh 'data' axis")
+    p.add_argument("--router", default=None,
+                   choices=("round_robin", "least_loaded",
+                            "shortest_queue"),
+                   help="cluster routing policy (default: the "
+                        "MOZART_ROUTER knob)")
+    p.add_argument("--rate", type=float, default=0.0,
+                   help="open-loop Poisson arrival rate in req/s for "
+                        "the cluster path (0 = closed-loop burst)")
     args = p.parse_args()
 
     mcfg = configs.get_smoke_config(args.arch) if args.smoke \
@@ -159,6 +180,34 @@ def main() -> None:
         print(f"[serve] specdec: {len(out)} tokens in {dt:.2f}s; "
               f"accept={stats.acceptance_rate:.2f} "
               f"tokens/iter={stats.tokens_per_iteration:.2f}")
+        return
+
+    from repro.launch import knobs
+    n_replicas = args.replicas or knobs.get_int("MOZART_REPLICAS")
+    if n_replicas > 1:
+        from repro.serving.cluster import LoadGenerator, ServingCluster
+        mesh = eng_kwargs.pop("mesh", None)
+        cl = ServingCluster(mcfg, params, n_replicas=n_replicas,
+                            router=args.router, mesh=mesh,
+                            max_len=args.max_len, **eng_kwargs)
+        lg = LoadGenerator(n_requests=args.requests, rate=args.rate,
+                           vocab=mcfg.vocab, seed=0,
+                           max_new_tokens=args.max_new)
+        t0 = time.time()
+        summary = cl.drive(lg.schedule())
+        dt = time.time() - t0
+        agg = summary["aggregate"]
+        print(f"[serve] cluster x{n_replicas} router={cl.router.policy} "
+              f"rate={args.rate:g}: {agg['tokens_out']} tokens in "
+              f"{dt:.2f}s ({agg['tokens_out'] / max(dt, 1e-9):.1f} tok/s "
+              f"aggregate), ttft p50/p99 "
+              f"{agg['ttft_p50_ms']:.1f}/{agg['ttft_p99_ms']:.1f}ms, "
+              f"tpot p50/p99 "
+              f"{agg['tpot_p50_ms']:.2f}/{agg['tpot_p99_ms']:.2f}ms")
+        for row in summary["per_replica"]:
+            print(f"[serve]   replica {row['replica']}: "
+                  f"{row['tokens_out']} tokens, {row['prefills']} "
+                  f"prefills, {row['preemptions']} preemptions")
         return
 
     eng = ServingEngine(mcfg, params, max_len=args.max_len, **eng_kwargs)

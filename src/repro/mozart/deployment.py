@@ -8,6 +8,10 @@ through JSON (`Deployment.save` / `load`): chiplet pool, fusion
 solutions, per-stage configs, P&R placements, policies, and baselines
 all reload bit-exact, so one codesign run becomes a reusable artifact —
 CI can diff it, and `repro.launch.serve --policy <artifact>` consumes it.
+With `serve --replicas N` the same artifact drives a multi-replica
+`serving.cluster.ServingCluster`: the policy's TP layout is kept intact
+inside each replica while the replicas are mapped onto disjoint slices
+of the mesh's "data" axis (`parallel.sharding.replica_meshes`).
 """
 
 from __future__ import annotations

@@ -290,3 +290,43 @@ def paged_cache_shardings(mesh: Mesh, pool_segments: Any,
             dims[3] = "model"
         return NamedSharding(mesh, P(*dims))
     return jax.tree.map(leaf, pool_segments)
+
+
+# --- multi-replica serving ----------------------------------------------------
+
+def replica_meshes(mesh: Mesh | None, n: int) -> list:
+    """Split `mesh` into `n` per-replica submeshes along its "data" axis.
+
+    This is how `serve --replicas N` maps the serving cluster onto the
+    deployment policy's mesh: each replica keeps the full "model" (TP)
+    and "pod" extent — so the policy's TP degree stays intact inside a
+    replica — while the data axis is carved into N equal blocks, one per
+    replica.  Params placed with `params_shardings` on a submesh are
+    replicated across that replica's data block (no param rule shards
+    over "data" unless fsdp), which is exactly the cluster contract:
+    N replicas of the same weights, independent KV pools.
+
+    `mesh=None` (single-device serving) returns `[None] * n`; `n == 1`
+    returns the mesh unchanged.  A mesh whose data axis does not divide
+    by `n` is an error — silently replicating would double-book devices.
+    """
+    if mesh is None:
+        return [None] * n
+    if n == 1:
+        return [mesh]
+    names = list(mesh.axis_names)
+    if "data" not in names:
+        raise ValueError(
+            f"mesh {names} has no 'data' axis to split {n} replicas over")
+    d_ax = names.index("data")
+    dsz = mesh.devices.shape[d_ax]
+    if dsz % n != 0:
+        raise ValueError(
+            f"data axis of size {dsz} does not divide into {n} replicas")
+    chunk = dsz // n
+    out = []
+    for i in range(n):
+        sl: list = [slice(None)] * mesh.devices.ndim
+        sl[d_ax] = slice(i * chunk, (i + 1) * chunk)
+        out.append(Mesh(mesh.devices[tuple(sl)], mesh.axis_names))
+    return out

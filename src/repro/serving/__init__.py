@@ -1,1 +1,1 @@
-from . import engine, sampling, specdec
+from . import cluster, engine, paged, quant, sampling, specdec, workload

@@ -1,0 +1,342 @@
+"""Multi-replica serving cluster: router, load generator, metrics.
+
+The paper's datacenter story (fig10/table2) is about FLEETS of composite
+BASICs absorbing heavy traffic; a single `ServingEngine` replica caps
+concurrency at its HBM slot count.  `ServingCluster` scales the same
+engine out: N replicas share one set of model weights (placed per
+replica — over per-replica submeshes carved from the mesh "data" axis by
+`parallel.sharding.replica_meshes` when devices allow, plain per-replica
+placement otherwise), each replica owns an independent paged KV pool,
+and a `Router` spreads requests across them:
+
+* ``round_robin``     — cycle over healthy replicas;
+* ``least_loaded``    — most free KV pages (free slots for dense
+  engines): admission pressure follows HBM headroom, which is what
+  actually gates a paged replica;
+* ``shortest_queue``  — join-shortest-queue over queued + in-flight
+  requests.
+
+Failure injection: `kill_replica(i)` marks a replica unhealthy and
+re-routes everything it held — queued requests as-is, in-flight slot
+requests through the engine's resume path (re-prefill of
+prompt + emitted tokens, continuing from the last sampled token) — onto
+the surviving replicas, at the front of their queues.  Greedy decoding
+makes the recovery exact: a killed replica's requests finish elsewhere
+with the token stream an uninterrupted run would have produced, no
+tokens lost or duplicated.
+
+`LoadGenerator` is an OPEN-LOOP Poisson source (seeded): arrival times
+are drawn up front, independent of service times — the arrival process a
+fleet sized for heavy traffic actually faces, and the one that exposes
+queueing delay that closed-loop (submit-on-completion) driving hides.
+Prompts come from `serving.workload`'s Zipf mix, the same deterministic
+generator `benchmarks/bench_serving.py` replays.
+
+`ClusterMetrics` samples per-replica queue depth, live slots, and
+page-pool occupancy every step, and reduces request timing marks into
+aggregate and per-replica TTFT/TPOT p50/p99 plus
+preemption/rejection/requeue counts.
+
+The cluster steps replicas round-robin in one host loop (the engines'
+jitted work is async-dispatched; on multi-device meshes the replicas'
+device programs overlap).  Everything here is host-side orchestration —
+no new jitted code, so steady-state serving stays within the engines'
+compiled-executable budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.launch import knobs
+from repro.models.config import ModelConfig
+
+from . import workload
+from .engine import Request, ServingEngine
+
+ROUTER_POLICIES = ("round_robin", "least_loaded", "shortest_queue")
+
+
+def _free_capacity(eng: ServingEngine) -> int:
+    """A replica's admission headroom: free KV pages for paged engines,
+    free slots (in page-equivalents they are not, but the ordering is
+    what matters) for dense ones."""
+    if eng.paged:
+        return eng.pool.free_pages
+    return sum(1 for s in eng.slots if s is None)
+
+
+def _queue_load(eng: ServingEngine) -> int:
+    return len(eng.queue) + sum(1 for s in eng.slots if s is not None)
+
+
+class Router:
+    """Pluggable request-routing policy over the healthy replicas.
+    Ties break on the lowest replica id, so routing is deterministic for
+    a fixed submission order."""
+
+    def __init__(self, policy: str | None = None):
+        policy = policy or knobs.get_str("MOZART_ROUTER")
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(
+                f"unknown router policy {policy!r}; pick one of {ROUTER_POLICIES}"
+            )
+        self.policy = policy
+        self._rr = 0
+
+    def pick(self, replicas: list[ServingEngine], healthy: list[int]) -> int:
+        if not healthy:
+            raise RuntimeError("no healthy replicas to route to")
+        if self.policy == "round_robin":
+            # cycle over replica ids so a dead replica's turn passes to
+            # the next healthy one instead of skewing the rotation
+            for _ in range(len(replicas)):
+                i = self._rr % len(replicas)
+                self._rr += 1
+                if i in healthy:
+                    return i
+            return healthy[0]
+        if self.policy == "least_loaded":
+            return max(healthy, key=lambda i: (_free_capacity(replicas[i]), -i))
+        return min(healthy, key=lambda i: (_queue_load(replicas[i]), i))
+
+
+@dataclasses.dataclass
+class LoadGenerator:
+    """Seeded open-loop Poisson source over the Zipf prompt mix.
+
+    `rate` is in requests/second of wall-clock driving time; `rate <= 0`
+    degenerates to a closed-loop burst (every request due at t=0).
+    """
+
+    n_requests: int
+    rate: float
+    vocab: int
+    seed: int = 0
+    max_new_tokens: int = 16
+    bands: tuple[tuple[int, int], ...] = workload.DEFAULT_BANDS
+
+    def schedule(self) -> list[tuple[float, Request]]:
+        """[(arrival_offset_seconds, request)], arrival-sorted.  One rng
+        drives both draws, so a seed pins the entire trace."""
+        rng = np.random.default_rng(self.seed)
+        reqs = workload.zipf_mix_requests(
+            rng,
+            self.n_requests,
+            self.vocab,
+            bands=self.bands,
+            max_new_tokens=self.max_new_tokens,
+        )
+        times = workload.poisson_arrivals(rng, self.n_requests, self.rate)
+        return list(zip(times.tolist(), reqs))
+
+
+class ClusterMetrics:
+    """Per-step occupancy time series + request-mark reductions."""
+
+    def __init__(self, n_replicas: int):
+        self.n_replicas = n_replicas
+        self.series: dict[str, list[tuple[int, ...]]] = {
+            "queue_depth": [],
+            "live_slots": [],
+            "free_pages": [],
+        }
+
+    def tick(self, replicas: list[ServingEngine]) -> None:
+        self.series["queue_depth"].append(tuple(len(r.queue) for r in replicas))
+        self.series["live_slots"].append(
+            tuple(sum(1 for s in r.slots if s is not None) for r in replicas)
+        )
+        self.series["free_pages"].append(
+            tuple(r.pool.free_pages if r.paged else 0 for r in replicas)
+        )
+
+    @staticmethod
+    def _pct_ms(samples: list[float], q: float) -> float:
+        return float(np.percentile(np.asarray(samples), q) * 1e3) if samples else 0.0
+
+    @classmethod
+    def _latency(cls, reqs: list[Request]) -> dict[str, float]:
+        ttft = [r.t_first - r.t_submit for r in reqs if r.t_first is not None]
+        tpot = [
+            (r.t_done - r.t_first) / (len(r.out_tokens) - 1)
+            for r in reqs
+            if r.t_done is not None and r.t_first is not None and len(r.out_tokens) > 1
+        ]
+        return {
+            "ttft_p50_ms": cls._pct_ms(ttft, 50),
+            "ttft_p99_ms": cls._pct_ms(ttft, 99),
+            "tpot_p50_ms": cls._pct_ms(tpot, 50),
+            "tpot_p99_ms": cls._pct_ms(tpot, 99),
+            "n_finished": sum(1 for r in reqs if r.t_done is not None),
+        }
+
+    def summary(self, cluster: "ServingCluster") -> dict:
+        """Aggregate + per-replica latency percentiles, engine counters,
+        and occupancy peaks — the numbers the cluster bench gates on."""
+        per_replica = []
+        for i, eng in enumerate(cluster.replicas):
+            mine = [r for r in cluster.requests if cluster.assignment.get(r.rid) == i]
+            row = dict(self._latency(mine))
+            row.update(
+                replica=i,
+                healthy=i in cluster.healthy,
+                tokens_out=eng.stats["tokens_out"],
+                decode_steps=eng.stats["decode_steps"],
+                prefills=eng.stats["prefills"],
+                preemptions=eng.stats["preemptions"],
+                rejected=eng.stats["rejected"],
+            )
+            per_replica.append(row)
+        agg = dict(self._latency(cluster.requests))
+        agg.update(
+            n_replicas=len(cluster.replicas),
+            router=cluster.router.policy,
+            tokens_out=sum(r["tokens_out"] for r in per_replica),
+            preemptions=sum(r["preemptions"] for r in per_replica),
+            rejected=sum(r["rejected"] for r in per_replica),
+            requeued=cluster.stats["requeued"],
+            replica_failures=cluster.stats["replica_failures"],
+            peak_queue_depth=max(
+                (sum(t) for t in self.series["queue_depth"]), default=0
+            ),
+            min_free_pages=min(
+                (min(t) for t in self.series["free_pages"]), default=0
+            ),
+        )
+        return {"aggregate": agg, "per_replica": per_replica}
+
+
+class ServingCluster:
+    """N `ServingEngine` replicas behind one router.
+
+    Every replica is built from the same model config and host params;
+    `mesh` (optional) is split along its "data" axis into per-replica
+    submeshes, so the policy's TP degree stays intact inside each replica
+    while replicas spread across the data axis — `serve --replicas` maps
+    the deployment policy onto exactly that layout.
+    """
+
+    def __init__(
+        self,
+        mcfg: ModelConfig,
+        params,
+        *,
+        n_replicas: int | None = None,
+        router: Router | str | None = None,
+        mesh=None,
+        **engine_kwargs,
+    ):
+        n = n_replicas or knobs.get_int("MOZART_REPLICAS")
+        if n < 1:
+            raise ValueError(f"need at least one replica, got {n}")
+        if mesh is not None:
+            from repro.parallel.sharding import replica_meshes
+
+            meshes = replica_meshes(mesh, n)
+        else:
+            meshes = [None] * n
+        self.replicas = [
+            ServingEngine(mcfg, params, mesh=meshes[i], **engine_kwargs)
+            for i in range(n)
+        ]
+        self.router = router if isinstance(router, Router) else Router(router)
+        self.healthy: list[int] = list(range(n))
+        self.requests: list[Request] = []
+        self.assignment: dict[int, int] = {}  # rid -> serving replica
+        self.metrics = ClusterMetrics(n)
+        self.stats = {"requeued": 0, "replica_failures": 0, "steps": 0}
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Route one request to a healthy replica; returns its index."""
+        i = self.router.pick(self.replicas, self.healthy)
+        if req.t_submit is None:
+            req.t_submit = time.monotonic()
+        self.requests.append(req)
+        self.assignment[req.rid] = i
+        self.replicas[i].submit(req)
+        return i
+
+    def kill_replica(self, i: int) -> int:
+        """Fail replica `i`: requeue everything it held onto the
+        survivors (in-flight slots resume via the engines' re-prefill
+        path).  Returns the number of requests re-routed."""
+        if i not in self.healthy:
+            return 0
+        if len(self.healthy) == 1:
+            raise RuntimeError("cannot kill the last healthy replica")
+        self.healthy.remove(i)
+        eng = self.replicas[i]
+        stranded: list[Request] = []
+        for b, req in enumerate(eng.slots):
+            if req is None:
+                continue
+            eng.slots[b] = None
+            if eng.paged:
+                eng.pool.release(b)
+            stranded.append(req)
+        stranded.extend(eng.queue)
+        eng.queue.clear()
+        # retry priority: a failed-over request goes to the FRONT of its
+        # new replica's queue, mirroring the engines' preemption requeue
+        for req in stranded:
+            if req.done:
+                continue
+            j = self.router.pick(self.replicas, self.healthy)
+            self.assignment[req.rid] = j
+            self.replicas[j].queue.insert(0, req)
+            self.stats["requeued"] += 1
+        self.stats["replica_failures"] += 1
+        return len(stranded)
+
+    # -- drive loops ---------------------------------------------------------
+
+    @property
+    def pending_work(self) -> bool:
+        return any(
+            self.replicas[i].queue
+            or any(s is not None for s in self.replicas[i].slots)
+            for i in self.healthy
+        )
+
+    def step(self) -> int:
+        """One round-robin pass: every healthy replica with work takes
+        one engine step.  Returns the number of active slots stepped."""
+        active = 0
+        for i in self.healthy:
+            eng = self.replicas[i]
+            if eng.queue or any(s is not None for s in eng.slots):
+                active += eng.step()
+        self.metrics.tick(self.replicas)
+        self.stats["steps"] += 1
+        return active
+
+    def run(self, max_steps: int = 100_000) -> None:
+        steps = 0
+        while self.pending_work and steps < max_steps:
+            self.step()
+            steps += 1
+
+    def drive(self, schedule: list[tuple[float, Request]], max_steps: int = 1_000_000):
+        """Open-loop replay: submit each request at (or after) its
+        arrival offset while continuously stepping the replicas; idle
+        gaps sleep until the next arrival instead of spinning."""
+        t0 = time.monotonic()
+        idx, steps = 0, 0
+        n = len(schedule)
+        while (idx < n or self.pending_work) and steps < max_steps:
+            now = time.monotonic() - t0
+            while idx < n and schedule[idx][0] <= now:
+                self.submit(schedule[idx][1])
+                idx += 1
+            if self.pending_work:
+                self.step()
+                steps += 1
+            elif idx < n:
+                time.sleep(min(max(schedule[idx][0] - now, 0.0), 0.05))
+        return self.metrics.summary(self)

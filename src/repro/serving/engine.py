@@ -21,7 +21,10 @@ Decode gathers the active slots' pages into the dense layout
 against the dense cache.  When the free list runs dry the engine
 preempts the youngest-admitted slot (requeued at the queue front and
 later resumed by re-prefilling its tokens).  `paged=False` (or
-`MOZART_PAGED_KV=0`) restores the dense rectangles.
+`MOZART_PAGED_KV=0`) restores the dense rectangles.  `kv_quant=True`
+(`MOZART_KV_QUANT=1`, paged only) stores pages int8 with per-head scales
+(`serving.quant`): the gather dequantizes, the scatter re-quantizes, and
+the same HBM holds ~4x the slots at token-level (not bit-level) parity.
 
 When `decode_batch < max_batch` the engine runs a COMPACTED sub-batch
 decode: the active slots' cache slices are gathered into a dense
@@ -154,7 +157,8 @@ class ServingEngine:
                  decode_batch: int | None = None, eos_id: int = -1,
                  compact: bool | None = None, mesh=None,
                  paged: bool | None = None, page_size: int | None = None,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None,
+                 kv_quant: bool | None = None):
         self.mcfg = mcfg
         self.params = params
         self.max_batch = max_batch
@@ -175,13 +179,19 @@ class ServingEngine:
         # paged + bucketed serving is exact only for the plain transformer
         # cache (no SWA ring, no MoE capacity router) — see paged_supported
         self.paged = paged and paged_kv.paged_supported(mcfg)
+        if kv_quant is None:
+            kv_quant = knobs.get_bool("MOZART_KV_QUANT")
+        # int8 KV rides the paged gather/scatter round-trip, so it is
+        # paged-only: the dense rectangles silently stay f32
+        self.kv_quant = bool(kv_quant) and self.paged
         self._next_slot = 0           # rotation cursor: a SLOT ID
         self.eos_id = eos_id
         self._admit_counter = 0
         if self.paged:
             ps = page_size or knobs.get_int("MOZART_KV_PAGE_SIZE")
             self.pool = paged_kv.PagePool(
-                mcfg, max_batch, max_len, page_size=ps, num_pages=num_pages)
+                mcfg, max_batch, max_len, page_size=ps, num_pages=num_pages,
+                quant=self.kv_quant)
             self.buckets = paged_kv.prefill_buckets(
                 max_len, knobs.get_int("MOZART_PREFILL_BUCKET_MIN"))
             self.capacity = paged_kv.pool_token_capacity(self.pool, max_len)
@@ -205,6 +215,13 @@ class ServingEngine:
                     self.pool.segments,
                     paged_cache_shardings(mesh, self.pool.segments,
                                           mcfg.kv_heads))
+                if self.kv_quant:
+                    # scale leaves keep kvh on axis 3 (keepdims layout),
+                    # so the same placement rule applies
+                    self.pool.scales = jax.device_put(
+                        self.pool.scales,
+                        paged_cache_shardings(mesh, self.pool.scales,
+                                              mcfg.kv_heads))
             else:
                 self.cache = jax.device_put(
                     self.cache, cache_shardings(mesh, self.cache,
@@ -215,7 +232,8 @@ class ServingEngine:
         self.key = jax.random.PRNGKey(0)
         self._decode = _decode_fn(mcfg)
         self._prefill = _prefill_fn(mcfg, max_len)
-        self._paged_decode = paged_kv.paged_decode_fn(mcfg) if self.paged \
+        self._paged_decode = \
+            paged_kv.paged_decode_fn(mcfg, self.kv_quant) if self.paged \
             else None
         self.stats = {"decode_steps": 0, "prefills": 0,
                       "tokens_out": 0, "slot_occupancy": [],
@@ -319,10 +337,16 @@ class ServingEngine:
         bucket = paged_kv.bucket_for(plen, self.buckets)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = seq
-        fn = paged_kv.paged_prefill_fn(self.mcfg, bucket, self.pool.page_size)
+        fn = paged_kv.paged_prefill_fn(self.mcfg, bucket, self.pool.page_size,
+                                       self.kv_quant)
         trow = self.pool.table_row(b, bucket // self.pool.page_size)
-        last, self.pool.segments = fn(
-            self.params, toks, plen, self.pool.segments, trow)
+        if self.kv_quant:
+            last, self.pool.segments, self.pool.scales = fn(
+                self.params, toks, plen, self.pool.segments,
+                self.pool.scales, trow)
+        else:
+            last, self.pool.segments = fn(
+                self.params, toks, plen, self.pool.segments, trow)
         self.pool.index[b] = plen
         return last
 
@@ -428,9 +452,14 @@ class ServingEngine:
         sel = active + [active[0]] * (width - len(active))
         tables_sel = self.pool.tables[np.asarray(sel)]
         index_sel = self.pool.index[np.asarray(sel)]
-        logits, self.pool.segments = self._paged_decode(
-            self.params, jnp.asarray(self.next_token[sel]),
-            self.pool.segments, tables_sel, index_sel)
+        if self.kv_quant:
+            logits, self.pool.segments, self.pool.scales = self._paged_decode(
+                self.params, jnp.asarray(self.next_token[sel]),
+                self.pool.segments, self.pool.scales, tables_sel, index_sel)
+        else:
+            logits, self.pool.segments = self._paged_decode(
+                self.params, jnp.asarray(self.next_token[sel]),
+                self.pool.segments, tables_sel, index_sel)
         # page-table bookkeeping is host-side numpy: advance the lengths
         # here instead of round-tripping them through the device
         self.pool.index[np.asarray(active)] += 1

@@ -15,8 +15,19 @@ length.  This module replaces both:
   power-of-two bucket, so an arbitrary prompt mix compiles at most
   `len(prefill_buckets(...))` prefill executables.  Causal attention
   makes the padding exact: positions `< plen` never attend to the pad
-  tail, and the pad tail's garbage KV is overwritten by decode before
-  its position becomes visible.
+  tail.  The prefill scatter is RAGGED (per-page): pad positions are
+  zeroed and table entries whose page starts at or past `plen` are
+  redirected to the null page inside the trace, so bucket padding never
+  occupies — or pollutes — pages past the true prompt length; a page's
+  only nonzero contents are real KV.
+* **Int8 quantization** — with `quant=True` (`MOZART_KV_QUANT=1`) pages
+  are stored int8 with per-(layer, page, kv-head) float32 scales
+  (`serving.quant`): gather dequantizes into the f32 dense sub-cache the
+  unchanged decode math runs over, scatter re-quantizes with fresh
+  scales, and positions at or past each slot's length are zeroed before
+  re-quantization so stale garbage in reused pages can never inflate a
+  scale and crush the live tokens' resolution.  Same decode loop, ~4x
+  the slots per HBM byte (`quant.pages_for_byte_budget`).
 
 Decode gathers the selected slots' pages into the dense `(n, C, ...)`
 layout `transformer.decode_step` already understands, runs the unchanged
@@ -39,6 +50,8 @@ import numpy as np
 
 from repro.models import api, transformer
 from repro.models.config import ModelConfig
+
+from . import quant as kvq
 
 
 def prefill_buckets(max_len: int, min_bucket: int = 16) -> tuple[int, ...]:
@@ -77,6 +90,7 @@ class PagePool:
         page_size: int = 16,
         num_pages: int | None = None,
         dtype=None,
+        quant: bool = False,
     ):
         if page_size < 1 or page_size & (page_size - 1):
             raise ValueError(f"page_size must be a power of two, got {page_size}")
@@ -89,7 +103,14 @@ class PagePool:
         self.num_pages = num_pages or 1 + max_batch * self.pages_per_slot
         if self.num_pages < 2:
             raise ValueError("need at least one allocatable page beyond the null page")
-        self.segments = api.init_paged_cache(mcfg, self.num_pages, page_size, dtype)
+        # quant: int8 pages + per-(layer, page, kv-head) f32 scales; the
+        # prefill/decode builders below dequantize on gather and
+        # re-quantize on scatter (serving.quant)
+        self.quant = quant
+        self.segments = api.init_paged_cache(
+            mcfg, self.num_pages, page_size, jnp.int8 if quant else dtype
+        )
+        self.scales = kvq.scale_struct(self.segments) if quant else None
         # tables/index are HOST state (numpy): they enter jitted code as
         # ordinary array arguments, never as baked-in constants, so page
         # churn can't mint fresh executables
@@ -106,6 +127,16 @@ class PagePool:
     @property
     def pages_in_use(self) -> int:
         return (self.num_pages - 1) - len(self._free)
+
+    @property
+    def page_nbytes(self) -> int:
+        """HBM bytes one page costs across every layer's pools (plus its
+        scale entries when quantized) — the unit `quant.
+        pages_for_byte_budget` sizes byte-matched pools with."""
+        total = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.segments))
+        if self.quant:
+            total += sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.scales))
+        return total // self.num_pages
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
@@ -172,13 +203,57 @@ def _scatter_pages(segments, dense, tables_sel):
     return jax.tree.map(leaf, segments, dense)
 
 
+def _gather_pages_dequant(segments, scales, tables_sel):
+    """Int8 pool pages -> dequantized f32 dense (n, C, ...) cache layout.
+    Each page's scale broadcasts over its positions (and head_dim) via
+    the keepdims-1 axes `quant.page_scales` left in place."""
+    n, npp = tables_sel.shape
+
+    def leaf(a, s):  # a: (L, P, ps, ...) int8; s: (L, P, 1, ...) f32
+        g = jnp.take(a, tables_sel, axis=1)  # (L, n, npp, ps, ...)
+        gs = jnp.take(s, tables_sel, axis=1)  # (L, n, npp, 1, ...)
+        d = kvq.dequantize_block(g, gs)
+        return d.reshape(a.shape[0], n, npp * a.shape[2], *a.shape[3:])
+
+    return jax.tree.map(leaf, segments, scales)
+
+
+def _scatter_pages_quant(segments, scales, dense, tables_sel, new_len):
+    """Re-quantize an advanced dense sub-cache back into int8 pages with
+    FRESH per-page scales.  Positions at or past each lane's new length
+    (`new_len`, (n,)) are zeroed first: a reused page's stale garbage —
+    or the never-read null page's — must not inflate a scale and crush
+    the resolution of the page's live tokens."""
+    n, npp = tables_sel.shape
+    seg_leaves, treedef = jax.tree.flatten(segments)
+    scale_leaves = jax.tree.leaves(scales)
+    dense_leaves = jax.tree.leaves(dense)
+    out_segs, out_scales = [], []
+    for a, s, d in zip(seg_leaves, scale_leaves, dense_leaves):
+        pos = jnp.arange(d.shape[2])
+        live = (pos[None, :] < new_len[:, None]).reshape(
+            1, n, d.shape[2], *([1] * (d.ndim - 3))
+        )
+        dp = jnp.where(live, d, 0).reshape(
+            a.shape[0], n, npp, a.shape[2], *a.shape[3:]
+        )
+        q, qs = kvq.quantize_block(dp, ps_axis=3)
+        out_segs.append(a.at[:, tables_sel].set(q))
+        out_scales.append(s.at[:, tables_sel].set(qs))
+    return (
+        jax.tree.unflatten(treedef, out_segs),
+        jax.tree.unflatten(jax.tree.structure(scales), out_scales),
+    )
+
+
 @functools.lru_cache(maxsize=8)
-def paged_decode_fn(mcfg: ModelConfig):
+def paged_decode_fn(mcfg: ModelConfig, quantized: bool = False):
     """Jitted gather -> decode -> scatter over the page pool.  One
     executable per (config, selection width); the pool buffers are
     donated so the scatter updates in place.  Slot lengths advance on the
     host (the caller knows exactly which slots stepped), so only logits
-    and the pool round-trip the device."""
+    and the pool round-trip the device.  The quantized variant takes and
+    returns the scale tree alongside the int8 pool."""
 
     def fn(params, tokens, segments, tables_sel, index_sel):
         dense = _gather_pages(segments, tables_sel)
@@ -187,38 +262,100 @@ def paged_decode_fn(mcfg: ModelConfig):
         )
         return logits, _scatter_pages(segments, new["segments"], tables_sel)
 
+    def fn_q(params, tokens, segments, scales, tables_sel, index_sel):
+        dense = _gather_pages_dequant(segments, scales, tables_sel)
+        logits, new = api.decode_step(
+            mcfg, params, tokens, {"segments": dense, "index": index_sel}
+        )
+        segs2, scales2 = _scatter_pages_quant(
+            segments, scales, new["segments"], tables_sel, new["index"]
+        )
+        return logits, segs2, scales2
+
+    if quantized:
+        return jax.jit(fn_q, donate_argnums=(2, 3))
     return jax.jit(fn, donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=32)
-def paged_prefill_fn(mcfg: ModelConfig, bucket: int, page_size: int):
-    """Jitted padded prefill + page scatter for one bucket length.  The
-    prompt arrives right-padded to `bucket`; `plen` (traced) selects the
-    real last-token logits, and the prompt's KV lands in the pages named
-    by `table_row`.  Pad positions `>= plen` write garbage into the tail
-    of the last real page (overwritten by decode before ever unmasked)
-    and into the null page (never read)."""
+def paged_prefill_fn(
+    mcfg: ModelConfig, bucket: int, page_size: int, quantized: bool = False
+):
+    """Jitted padded prefill + RAGGED per-page scatter for one bucket
+    length.  The prompt arrives right-padded to `bucket`; `plen`
+    (traced) selects the real last-token logits, and the prompt's KV
+    lands in the pages named by `table_row`.  Pad positions `>= plen`
+    are zeroed and table entries whose page starts at or past `plen` are
+    redirected to the null page, so the whole-bucket rectangle never
+    lands in pages past the true prompt length: a slot's pages hold real
+    KV and zeros, nothing else (which is also what keeps the quantized
+    variant's per-page absmax scales driven by live tokens only)."""
     if bucket % page_size:
         raise ValueError(f"bucket {bucket} is not a multiple of page_size {page_size}")
     npp_b = bucket // page_size
 
-    def fn(params, toks, plen, segments, table_row):
-        logits, _, kvs = transformer.forward(mcfg, params, toks, collect_kv=True)
-        last = jax.lax.dynamic_slice_in_dim(logits, plen - 1, 1, axis=1)
-
-        def leaf(a, kv):  # a: (L, P, ps, ...); kv: (L, 1, bucket, ...)
-            pages = kv[:, 0].reshape(a.shape[0], npp_b, page_size, *kv.shape[3:])
-            return a.at[:, table_row].set(pages.astype(a.dtype))
-
-        new_segs = []
-        for seg_kv, seg_pool in zip(kvs, segments):
+    def _masked_kv(plen, kvs):
+        """Per-segment KV trees with pad positions zeroed, plus the
+        null-redirected table-row transform for pages past plen."""
+        valid = jnp.arange(bucket) < plen  # (bucket,)
+        page_live = (jnp.arange(npp_b) * page_size) < plen  # (npp_b,)
+        trees = []
+        for seg_kv in kvs:
             if mcfg.use_mla:
                 kv_tree = {"latent": seg_kv[0]}
             else:
                 kv_tree = {"k": seg_kv[0], "v": seg_kv[1]}
-            new_segs.append(jax.tree.map(leaf, seg_pool, kv_tree))
+            trees.append(
+                jax.tree.map(
+                    lambda kv: jnp.where(
+                        valid.reshape(1, 1, bucket, *([1] * (kv.ndim - 3))), kv, 0
+                    ),
+                    kv_tree,
+                )
+            )
+        return trees, page_live
+
+    def _pages(kv):  # (L, 1, bucket, ...) -> (L, npp_b, page_size, ...)
+        return kv[:, 0].reshape(kv.shape[0], npp_b, page_size, *kv.shape[3:])
+
+    def fn(params, toks, plen, segments, table_row):
+        logits, _, kvs = transformer.forward(mcfg, params, toks, collect_kv=True)
+        last = jax.lax.dynamic_slice_in_dim(logits, plen - 1, 1, axis=1)
+        kv_trees, page_live = _masked_kv(plen, kvs)
+        row = jnp.where(page_live, table_row, 0)
+        new_segs = [
+            jax.tree.map(
+                lambda a, kv: a.at[:, row].set(_pages(kv).astype(a.dtype)),
+                seg_pool,
+                kv_tree,
+            )
+            for seg_pool, kv_tree in zip(segments, kv_trees)
+        ]
         return last, new_segs
 
+    def fn_q(params, toks, plen, segments, scales, table_row):
+        logits, _, kvs = transformer.forward(mcfg, params, toks, collect_kv=True)
+        last = jax.lax.dynamic_slice_in_dim(logits, plen - 1, 1, axis=1)
+        kv_trees, page_live = _masked_kv(plen, kvs)
+        row = jnp.where(page_live, table_row, 0)
+        new_segs, new_scales = [], []
+        for seg_pool, seg_scale, kv_tree in zip(segments, scales, kv_trees):
+            seg_leaves, treedef = jax.tree.flatten(seg_pool)
+            scale_leaves = jax.tree.leaves(seg_scale)
+            kv_leaves = jax.tree.leaves(kv_tree)
+            out_a, out_s = [], []
+            for a, s, kv in zip(seg_leaves, scale_leaves, kv_leaves):
+                q, qs = kvq.quantize_block(_pages(kv), ps_axis=2)
+                out_a.append(a.at[:, row].set(q))
+                out_s.append(s.at[:, row].set(qs))
+            new_segs.append(jax.tree.unflatten(treedef, out_a))
+            new_scales.append(
+                jax.tree.unflatten(jax.tree.structure(seg_scale), out_s)
+            )
+        return last, new_segs, new_scales
+
+    if quantized:
+        return jax.jit(fn_q, donate_argnums=(3, 4))
     return jax.jit(fn, donate_argnums=(3,))
 
 

@@ -1,0 +1,77 @@
+"""Seeded, importable serving workloads.
+
+One deterministic implementation of the request mixes the serving
+benchmarks and the cluster load generator both draw from, so a fixed
+seed produces the identical request trace whether it is replayed
+closed-loop through `benchmarks/bench_serving.py` or open-loop through
+`serving.cluster.LoadGenerator`:
+
+* `zipf_mix_requests` — the Zipf-weighted short/medium/long prompt mix
+  (band i is drawn with weight 1/(i+1)): short prompts dominate, but the
+  tail crosses every power-of-two prefill-bucket boundary, so the mix
+  exercises each bucketed-prefill executable.
+* `poisson_arrivals` — open-loop Poisson arrival offsets (exponential
+  inter-arrival gaps at a fixed rate), independent of service times, the
+  arrival process the paper's datacenter serving story (fig10/table2)
+  assumes when it sizes fleets for heavy traffic.
+
+Both take a caller-owned `numpy.random.Generator`: the caller seeds it,
+and the draw ORDER here is part of the contract — reordering the calls
+would silently change every fixed-seed benchmark baseline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .engine import Request
+
+# short/medium/long prompt-length bands spanning the 16/32/64 prefill
+# buckets of a max_len=64 engine (the benchmarks' default geometry)
+DEFAULT_BANDS: tuple[tuple[int, int], ...] = ((4, 15), (17, 31), (33, 60))
+
+
+def zipf_band_weights(n_bands: int) -> np.ndarray:
+    """Normalized Zipf weights 1/(i+1) over `n_bands` length bands."""
+    w = 1.0 / (1.0 + np.arange(n_bands, dtype=np.float64))
+    return w / w.sum()
+
+
+def zipf_mix_requests(
+    rng: np.random.Generator,
+    n: int,
+    vocab: int,
+    *,
+    bands: tuple[tuple[int, int], ...] = DEFAULT_BANDS,
+    max_new_tokens: int = 16,
+    rid0: int = 0,
+) -> list[Request]:
+    """`n` requests with Zipf-weighted prompt lengths over `bands`.
+
+    Draw order per request: band choice, prompt length, prompt tokens —
+    fixed, so a seeded `rng` reproduces the exact trace everywhere.
+    """
+    weights = zipf_band_weights(len(bands))
+    reqs = []
+    for i in range(n):
+        lo, hi = bands[int(rng.choice(len(bands), p=weights))]
+        reqs.append(
+            Request(
+                rid=rid0 + i,
+                prompt=rng.integers(0, vocab, size=int(rng.integers(lo, hi + 1))).astype(
+                    np.int32
+                ),
+                max_new_tokens=max_new_tokens,
+            )
+        )
+    return reqs
+
+
+def poisson_arrivals(rng: np.random.Generator, n: int, rate: float) -> np.ndarray:
+    """`n` open-loop arrival offsets (seconds from t0) of a Poisson
+    process at `rate` requests/second: cumulative exponential gaps.
+    `rate <= 0` means all-at-once (a closed-loop burst at t=0)."""
+    if rate <= 0.0:
+        return np.zeros(n, np.float64)
+    gaps = rng.exponential(scale=1.0 / rate, size=n)
+    return np.cumsum(gaps)

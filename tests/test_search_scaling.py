@@ -222,11 +222,16 @@ def test_compare_gate_thresholds(tmp_path):
     baselines = {"codesign_search": {"min_speedup": 2.0},
                  "budget_scaling": {"require_monotone": True},
                  "batch_solve": {"min_speedup_vs_pr3": 1.5},
-                 "serving": {"min_speedup_compacted": 1.1}}
+                 "serving": {"min_speedup_compacted": 1.1},
+                 "cluster": {"min_speedup_multi": 1.5,
+                             "require_equal_tokens": True,
+                             "min_quant_token_match": 0.8,
+                             "min_quant_capacity_ratio": 2.0}}
 
     def write(speedup, identical, mono, batch_speedup=3.0,
               batch_identical=True, serving_speedup=1.5,
-              serving_identical=True):
+              serving_identical=True, cluster_speedup=1.8,
+              cluster_equal=True, quant_match=0.9, quant_cap=3.5):
         (tmp_path / "BENCH_codesign_search.json").write_text(json.dumps(
             {"speedup": speedup, "identical_best_design": identical}))
         (tmp_path / "BENCH_budget_scaling.json").write_text(json.dumps(
@@ -238,6 +243,12 @@ def test_compare_gate_thresholds(tmp_path):
         (tmp_path / "BENCH_serving.json").write_text(json.dumps(
             {"speedup_compacted_vs_emulated": serving_speedup,
              "identical_outputs": serving_identical}))
+        (tmp_path / "BENCH_cluster.json").write_text(json.dumps(
+            {"n_replicas": 4,
+             "speedup_multi_vs_single": cluster_speedup,
+             "equal_tokens": cluster_equal,
+             "quant_token_match_frac": quant_match,
+             "quant_capacity_ratio": quant_cap}))
 
     write(5.0, True, True)
     assert check(str(tmp_path), baselines) == []
@@ -259,5 +270,14 @@ def test_compare_gate_thresholds(tmp_path):
     write(5.0, True, True, serving_identical=False)
     assert any("emulated schedule" in f
                for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, cluster_speedup=1.1)  # scale-out regression
+    assert any("cluster" in f and "regressed" in f
+               for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, cluster_equal=False)  # unequal token counts
+    assert any("token counts" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, quant_match=0.5)      # int8-KV parity break
+    assert any("token match" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, quant_cap=1.2)        # int8-KV capacity loss
+    assert any("capacity ratio" in f for f in check(str(tmp_path), baselines))
     assert any("missing artifact" in f
                for f in check(str(tmp_path / "nope"), baselines))
