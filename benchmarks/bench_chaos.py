@@ -1,0 +1,297 @@
+"""Chaos harness: goodput and token-exactness under scripted faults.
+
+The resilience layer's whole claim is that the serving fleet keeps doing
+USEFUL work under churn: a fixed `ChaosSchedule` (kill, stall, NaN
+injection, each paired with a recovery) is replayed against a 3-replica
+cluster serving the same fixed-seed burst a fault-free reference run
+serves, and four properties are measured and gated
+(benchmarks/compare.py, "chaos" block of baselines.json):
+
+* GOODPUT — deadline-respecting tokens/s under chaos must stay >=
+  `min_goodput_frac` of the fault-free run's.  Deadlines here are
+  deliberately generous (30-60 s on a sub-second workload) so the gate
+  measures fault overhead — requeue re-prefills, quarantine scans,
+  restarts — and not CI-runner jitter; `goodput_violations` is an
+  independent recount pinned at zero.
+* TOKEN EXACTNESS — every request finishes with the byte-identical
+  token stream the fault-free run produced (greedy decode makes
+  failover resume exact; a single divergent token fails the gate).
+* WATCHDOG COVERAGE — the stall and the NaN faults are NOT cluster API
+  calls, they are silent corruptions; the run must show the watchdog
+  quarantined both (`min_quarantined`).
+* TOTAL OUTAGE — a separate drill kills EVERY replica mid-flight:
+  `run()` must return (not raise) with the stranded requests parked,
+  and restarting the replicas must complete them token-exactly.
+
+Two small drills complete the resilience surface: an already-expired
+deadline must be SHED at admission (never decoded), and a
+`retry_budget=0` failover must classify the bounced request as POISON
+instead of requeueing it forever.
+
+Run as a module (``PYTHONPATH=src python -m benchmarks.bench_chaos``)
+or via benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.serving import workload
+from repro.serving.cluster import ServingCluster
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.resilience import (
+    ChaosEvent,
+    ChaosSchedule,
+    Watchdog,
+    goodput_tokens,
+    goodput_violations,
+)
+
+from .common import write_bench_json
+
+CFG = ModelConfig(
+    name="bench-chaos",
+    n_layers=4,
+    d_model=256,
+    n_heads=8,
+    kv_heads=4,
+    head_dim=32,
+    d_ff=1024,
+    vocab=512,
+    dtype="float32",
+    param_dtype="float32",
+    scan_min_layers=2,
+)
+MAX_LEN = 128
+PAGE_SIZE = 8
+N_REPLICAS = 3
+SLOTS_PER_REPLICA = 2
+# per-replica pool sized for its slots: failures, not page pressure,
+# should be the only source of preemption churn in this benchmark
+NUM_PAGES = 1 + SLOTS_PER_REPLICA * (MAX_LEN // PAGE_SIZE)
+N_REQUESTS = 12
+MAX_NEW = 24
+BANDS = ((6, 20),)
+# generous SLO band (the workload finishes in well under a second):
+# chaos must not make the gate flaky, only measurably slower
+DEADLINE_BANDS = ((30.0, 60.0),)
+TRACE_SEED = 17
+# the watchdog bench config: quarantine a silent stall quickly so the
+# scripted stall fault resolves within the run
+STALL_STEPS = 6
+
+# the fault script, keyed to cluster step offsets (deterministic): a
+# clean kill early, a silent stall the watchdog must catch, a NaN'd KV
+# page the decode guard must catch — each paired with a recovery.  The
+# kill/stall/nan steps land while every replica still holds work.
+CHAOS_EVENTS = (
+    ChaosEvent(4, 0, "kill"),
+    ChaosEvent(8, 2, "stall"),  # watchdog quarantines at ~8+STALL_STEPS
+    ChaosEvent(16, 0, "restart"),
+    ChaosEvent(22, 2, "restart"),
+    ChaosEvent(26, 1, "nan"),  # guard flags, watchdog quarantines
+    ChaosEvent(38, 1, "restart"),
+)
+
+# every engine in this benchmark (reference and cluster replicas) shares
+# one geometry so token streams are comparable across drills
+ENGINE_KW = dict(
+    max_batch=SLOTS_PER_REPLICA,
+    max_len=MAX_LEN,
+    page_size=PAGE_SIZE,
+    num_pages=NUM_PAGES,
+    paged=True,
+)
+
+
+def _trace() -> list[Request]:
+    rng = np.random.default_rng(TRACE_SEED)
+    return workload.zipf_mix_requests(
+        rng,
+        N_REQUESTS,
+        CFG.vocab,
+        bands=BANDS,
+        max_new_tokens=MAX_NEW,
+        deadline_bands=DEADLINE_BANDS,
+    )
+
+
+def _cluster(params, **kw) -> ServingCluster:
+    kw.setdefault("n_replicas", N_REPLICAS)
+    kw.setdefault("watchdog", Watchdog(kw["n_replicas"], stall_steps=STALL_STEPS))
+    return ServingCluster(CFG, params, router="round_robin", **ENGINE_KW, **kw)
+
+
+def _burst(params, chaos: ChaosSchedule | None):
+    """Submit the fixed trace as a burst and run to completion; returns
+    (requests, cluster, wall_seconds, steps)."""
+    cl = _cluster(params)
+    reqs = _trace()
+    for r in reqs:
+        cl.submit(r)
+    t0 = time.perf_counter()
+    cl.run(chaos=chaos)
+    dt = time.perf_counter() - t0
+    return reqs, cl, dt, cl.stats["steps"]
+
+
+def _tokens_exact(ref: list[Request], got: list[Request]) -> bool:
+    return all(ra.out_tokens == rb.out_tokens for ra, rb in zip(ref, got))
+
+
+def _outage_drill(params) -> dict:
+    """Kill EVERY replica mid-flight: run() must hold (not raise), park
+    the stranded work, and finish it token-exactly after restarts."""
+    ref = ServingEngine(CFG, params, **ENGINE_KW)
+    ref_reqs = _trace()[:4]
+    for r in ref_reqs:
+        ref.submit(r)
+    ref.run()
+
+    cl = _cluster(params, n_replicas=2)
+    reqs = _trace()[:4]
+    for r in reqs:
+        cl.submit(r)
+    for _ in range(3):
+        cl.step()
+    step = cl.stats["steps"]
+    outage = ChaosSchedule([ChaosEvent(step, 0, "kill"), ChaosEvent(step, 1, "kill")])
+    survived = True
+    try:
+        cl.run(chaos=outage)  # total outage: must return, never raise
+    except Exception:  # noqa: BLE001 — surviving IS the measurement
+        survived = False
+    unrouted = len(cl.parked)
+    held = sum(1 for r in reqs if not r.done)
+    cl.restart_replica(0)
+    cl.restart_replica(1)
+    cl.run()
+    return {
+        "outage_survived": survived,
+        "outage_unrouted": unrouted,
+        "outage_held_requests": held,
+        "outage_tokens_exact": bool(all(r.done for r in reqs) and _tokens_exact(ref_reqs, reqs)),
+    }
+
+
+def _shed_poison_drill(params) -> dict:
+    """An expired deadline is shed at admission; a retry_budget=0
+    failover classifies the bounced request as poison."""
+    cl = _cluster(params, n_replicas=2, retry_budget=0)
+    rng = np.random.default_rng(5)
+    p0 = rng.integers(0, CFG.vocab, size=8).astype(np.int32)
+    p1 = rng.integers(0, CFG.vocab, size=8).astype(np.int32)
+    live = Request(rid=0, prompt=p0, max_new_tokens=4)
+    # already expired relative to its submit time: admission must shed
+    # it before it ever reaches a decode lane
+    expired = Request(rid=1, prompt=p1, max_new_tokens=4, deadline_s=1e-9)
+    cl.submit(live)
+    cl.submit(expired)
+    cl.step()
+    cl.kill_replica(cl.assignment[live.rid])  # retries exhausted -> poison
+    cl.run()
+    summary = cl.metrics.summary(cl)["aggregate"]
+    return {
+        "shed": summary["shed"],
+        "poisoned": summary["poisoned"],
+        "shed_never_decoded": bool(expired.finish_reason == "shed" and not expired.out_tokens),
+        "poison_classified": live.finish_reason == "poison",
+    }
+
+
+def run():
+    params = api.init_params(CFG, jax.random.PRNGKey(0))
+
+    # warm the jit caches (prefill buckets, decode widths, the finite
+    # guard) so both timed runs below measure steady-state serving
+    _burst(params, chaos=None)
+
+    ref_reqs, _ref_cl, ref_dt, ref_steps = _burst(params, chaos=None)
+    chaos = ChaosSchedule(CHAOS_EVENTS)
+    got_reqs, cl, chaos_dt, chaos_steps = _burst(params, chaos)
+
+    assert all(
+        r.done and r.finish_reason not in ("shed", "poison", "rejected") for r in ref_reqs
+    ), "fault-free reference failed to finish"
+    assert all(r.done for r in got_reqs), "chaos run stranded requests"
+    exact = _tokens_exact(ref_reqs, got_reqs)
+    assert exact, "chaos run diverged from the fault-free token streams"
+    assert len(chaos.fired) == len(CHAOS_EVENTS), "chaos script did not drain"
+
+    summary = cl.metrics.summary(cl)["aggregate"]
+    ref_good = goodput_tokens(ref_reqs)
+    chaos_good = goodput_tokens(got_reqs)
+    good_ref_tok_s = ref_good / max(ref_dt, 1e-9)
+    good_chaos_tok_s = chaos_good / max(chaos_dt, 1e-9)
+    goodput_frac = good_chaos_tok_s / max(good_ref_tok_s, 1e-9)
+    violations = goodput_violations(got_reqs)
+
+    drill = _outage_drill(params)
+    shed_poison = _shed_poison_drill(params)
+
+    rows = [
+        (
+            "chaos.goodput",
+            chaos_dt * 1e6 / max(len(got_reqs), 1),
+            f"goodput {good_ref_tok_s:.1f}->{good_chaos_tok_s:.1f} tok/s "
+            f"({goodput_frac:.2f}x) steps {ref_steps}->{chaos_steps} "
+            f"exact={exact}",
+        ),
+        (
+            "chaos.watchdog",
+            0.0,
+            f"quarantined={summary['quarantined']} "
+            f"restarts={summary['restarts']} "
+            f"requeued={summary['requeued']} "
+            f"events={[(s, i, why) for s, i, why in cl.watchdog.events]}",
+        ),
+        (
+            "chaos.outage",
+            0.0,
+            f"survived={drill['outage_survived']} "
+            f"unrouted={drill['outage_unrouted']} "
+            f"exact_after_restart={drill['outage_tokens_exact']}",
+        ),
+        (
+            "chaos.shed_poison",
+            0.0,
+            f"shed={shed_poison['shed']} poisoned={shed_poison['poisoned']}",
+        ),
+    ]
+
+    write_bench_json(
+        "chaos",
+        {
+            "n_replicas": N_REPLICAS,
+            "n_requests": N_REQUESTS,
+            "max_new_tokens": MAX_NEW,
+            "chaos_events": [[e.step, e.replica, e.kind] for e in CHAOS_EVENTS],
+            "goodput_ref_tokens": ref_good,
+            "goodput_chaos_tokens": chaos_good,
+            "goodput_ref_tok_s": good_ref_tok_s,
+            "goodput_chaos_tok_s": good_chaos_tok_s,
+            "goodput_frac": goodput_frac,
+            "goodput_violations": violations,
+            "completed_tokens_exact": bool(exact),
+            "recovery_steps": chaos_steps - ref_steps,
+            "recovery_s": chaos_dt - ref_dt,
+            "quarantined": summary["quarantined"],
+            "restarts": summary["restarts"],
+            "requeued": summary["requeued"],
+            "replica_failures": summary["replica_failures"],
+            **drill,
+            **shed_poison,
+        },
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

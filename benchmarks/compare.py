@@ -26,7 +26,14 @@ nonzero on any regression:
     MEASURED aggregate tokens/s (equal per-request token counts,
     >= min_speedup_multi), the int8 KV cache must hold token-level
     parity and >= 2x pages per HBM byte, and the open-loop Poisson
-    drive's aggregate p99 TTFT/TPOT must stay under their ceilings.
+    drive's aggregate p99 TTFT/TPOT must stay under their ceilings;
+  * chaos — under the fixed fault script the cluster's goodput
+    (deadline-respecting tokens/s) must stay >= min_goodput_frac of the
+    fault-free run with zero deadline-violating tokens counted as
+    goodput, every completed token stream must be byte-identical to the
+    fault-free run's, the watchdog must have quarantined the silent
+    faults (>= min_quarantined), and the total-outage drill must return
+    cleanly and recover token-exactly after restarts.
 
 Usage: PYTHONPATH=src python -m benchmarks.compare [--dir DIR]
        [--baseline benchmarks/baselines.json]
@@ -244,6 +251,57 @@ def check(bench_dir: str, baselines: dict) -> list[str]:
             else:
                 print(f"OK cluster: {key} {float(val):.1f}ms <= "
                       f"{float(limit):.1f}ms")
+
+    path = os.path.join(bench_dir, "BENCH_chaos.json")
+    blob = _load(path)
+    base = baselines.get("chaos", {})
+    if blob is None:
+        failures.append(f"missing artifact: {path}")
+    else:
+        min_frac = float(base.get("min_goodput_frac", 0.0))
+        frac = float(blob.get("goodput_frac", 0.0))
+        if frac < min_frac:
+            failures.append(
+                f"chaos goodput regressed: {frac:.2f}x of fault-free < "
+                f"baseline {min_frac:.2f}x")
+        else:
+            print(f"OK chaos: goodput under faults {frac:.2f}x >= "
+                  f"{min_frac:.2f}x of the fault-free run")
+        max_viol = base.get("max_goodput_violations")
+        if max_viol is not None:
+            viol = int(blob.get("goodput_violations", 1))
+            if viol > int(max_viol):
+                failures.append(
+                    f"chaos: {viol} deadline-violating requests counted "
+                    f"as goodput — baseline allows {max_viol}")
+            else:
+                print(f"OK chaos: goodput violations {viol} <= {max_viol}")
+        if base.get("require_exact_tokens", False) and \
+                not blob.get("completed_tokens_exact", False):
+            failures.append(
+                "chaos: completed token streams diverged from the "
+                "fault-free run — failover recovery is no longer exact")
+        if base.get("require_outage_survival", False):
+            for key in ("outage_survived", "outage_tokens_exact"):
+                if not blob.get(key, False):
+                    failures.append(
+                        f"chaos: total-outage drill failed ({key} is "
+                        f"false) — the cluster must hold parked work "
+                        f"and recover it token-exactly")
+            if blob.get("outage_survived") and blob.get("outage_tokens_exact"):
+                print(f"OK chaos: total outage held "
+                      f"{blob.get('outage_unrouted')} parked requests "
+                      f"and recovered token-exactly")
+        min_q = base.get("min_quarantined")
+        if min_q is not None:
+            q = int(blob.get("quarantined", 0))
+            if q < int(min_q):
+                failures.append(
+                    f"chaos: watchdog quarantined only {q} replicas — "
+                    f"the script's silent faults require >= {min_q}")
+            else:
+                print(f"OK chaos: watchdog quarantined {q} >= {min_q} "
+                      f"silently faulted replicas")
     return failures
 
 

@@ -24,6 +24,7 @@ MODULES = [
     "bench_batch_solve",     # generation-batched Layer-3 vs per-genome
     "bench_serving",         # compacted sub-batch decode vs PR-4 emulation
     "bench_cluster",         # multi-replica scale-out + int8 KV capacity
+    "bench_chaos",           # goodput + token exactness under fault script
 ]
 
 

@@ -105,6 +105,55 @@ KNOBS: tuple[Knob, ...] = (
         doc="serving-cluster replica count when the caller does not pass one "
         "(`serve --replicas` overrides)",
     ),
+    Knob(
+        name="MOZART_DEADLINE_SHED",
+        type="bool",
+        default="1",
+        doc="set to 0 to disable admission-control shedding of requests that "
+        "cannot meet their deadline (they decode to completion and miss it)",
+    ),
+    Knob(
+        name="MOZART_DEADLINE_DEFAULT_MS",
+        type="int",
+        default="0",
+        doc="per-request deadline (milliseconds) `serve` stamps on generated "
+        "requests when no deadline band is given (0 = no deadline)",
+    ),
+    Knob(
+        name="MOZART_QUEUE_BOUND",
+        type="int",
+        default="0",
+        doc="per-replica queue depth bound; a full queue sheds new submissions "
+        "(finish_reason=shed) instead of growing without bound (0 = unbounded)",
+    ),
+    Knob(
+        name="MOZART_RETRY_BUDGET",
+        type="int",
+        default="3",
+        doc="failovers a request survives before it is marked poison instead of "
+        "requeued — a poison request cannot take down every replica in turn",
+    ),
+    Knob(
+        name="MOZART_WATCHDOG_STALL_STEPS",
+        type="int",
+        default="50",
+        doc="cluster steps a replica may hold work without emitting a token "
+        "before the watchdog quarantines it as stalled",
+    ),
+    Knob(
+        name="MOZART_WATCHDOG_NAN",
+        type="bool",
+        default="1",
+        doc="set to 0 to disable the jitted NaN/Inf guard on decode logits "
+        "(the watchdog quarantines a replica the step it emits non-finite logits)",
+    ),
+    Knob(
+        name="MOZART_CHAOS_SEED",
+        type="int",
+        default="0",
+        doc="seed for `serving.resilience.ChaosSchedule.generate` when the "
+        "caller does not pass one (`serve --chaos` and bench_chaos use it)",
+    ),
 )
 
 _BY_NAME = {k.name: k for k in KNOBS}

@@ -26,6 +26,15 @@ out along the mesh "data" axis (`parallel.sharding.replica_meshes`), so
 composed BASIC behind a router, each with its own paged KV pool.
 `--rate R` drives the cluster open-loop at R req/s (Poisson, seeded)
 instead of the closed-loop burst.
+
+Resilience flags: `--deadline-ms D` stamps a D-millisecond SLO deadline
+on every generated request (default: the `MOZART_DEADLINE_DEFAULT_MS`
+knob; 0 = none) — the engines shed requests that cannot meet it
+(`finish_reason="shed"`).  `--chaos` replays a seeded fault script
+(`MOZART_CHAOS_SEED`; kill/restart/stall/nan events from
+`serving.resilience.ChaosSchedule.generate`) against the cluster while
+it serves, and the summary reports the shed / poisoned / quarantined /
+unrouted counts next to goodput (deadline-met tokens).
 """
 from __future__ import annotations
 
@@ -138,6 +147,14 @@ def main() -> None:
     p.add_argument("--rate", type=float, default=0.0,
                    help="open-loop Poisson arrival rate in req/s for "
                         "the cluster path (0 = closed-loop burst)")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="per-request SLO deadline in ms (default: the "
+                        "MOZART_DEADLINE_DEFAULT_MS knob; 0 = none); "
+                        "infeasible requests are shed at admission")
+    p.add_argument("--chaos", action="store_true",
+                   help="replay a seeded fault script (MOZART_CHAOS_SEED: "
+                        "kill/restart/stall/nan) against the cluster "
+                        "while it serves")
     args = p.parse_args()
 
     mcfg = configs.get_smoke_config(args.arch) if args.smoke \
@@ -186,15 +203,28 @@ def main() -> None:
     n_replicas = args.replicas or knobs.get_int("MOZART_REPLICAS")
     if n_replicas > 1:
         from repro.serving.cluster import LoadGenerator, ServingCluster
+        from repro.serving.resilience import ChaosSchedule
         mesh = eng_kwargs.pop("mesh", None)
+        deadline_ms = args.deadline_ms if args.deadline_ms is not None \
+            else float(knobs.get_int("MOZART_DEADLINE_DEFAULT_MS"))
+        deadline_bands = (((deadline_ms / 1e3, deadline_ms / 1e3),)
+                          if deadline_ms > 0 else None)
         cl = ServingCluster(mcfg, params, n_replicas=n_replicas,
                             router=args.router, mesh=mesh,
                             max_len=args.max_len, **eng_kwargs)
         lg = LoadGenerator(n_requests=args.requests, rate=args.rate,
                            vocab=mcfg.vocab, seed=0,
-                           max_new_tokens=args.max_new)
+                           max_new_tokens=args.max_new,
+                           deadline_bands=deadline_bands)
+        chaos = None
+        if args.chaos:
+            chaos = ChaosSchedule.generate(
+                n_replicas=n_replicas,
+                horizon=max(args.requests * args.max_new, 64))
+            print(f"[serve] chaos script: "
+                  f"{[(e.step, e.kind, e.replica) for e in chaos.events]}")
         t0 = time.time()
-        summary = cl.drive(lg.schedule())
+        summary = cl.drive(lg.schedule(), chaos=chaos)
         dt = time.time() - t0
         agg = summary["aggregate"]
         print(f"[serve] cluster x{n_replicas} router={cl.router.policy} "
@@ -204,6 +234,13 @@ def main() -> None:
               f"{agg['ttft_p50_ms']:.1f}/{agg['ttft_p99_ms']:.1f}ms, "
               f"tpot p50/p99 "
               f"{agg['tpot_p50_ms']:.2f}/{agg['tpot_p99_ms']:.2f}ms")
+        print(f"[serve]   goodput {agg['goodput_tokens']} tokens "
+              f"({agg['goodput_tokens'] / max(dt, 1e-9):.1f} tok/s), "
+              f"deadlines met/missed "
+              f"{agg['deadline_met']}/{agg['deadline_missed']}, "
+              f"shed={agg['shed']} poisoned={agg['poisoned']} "
+              f"quarantined={agg['quarantined']} "
+              f"restarts={agg['restarts']} unrouted={agg['n_unrouted']}")
         for row in summary["per_replica"]:
             print(f"[serve]   replica {row['replica']}: "
                   f"{row['tokens_out']} tokens, {row['prefills']} "

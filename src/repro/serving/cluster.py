@@ -25,6 +25,28 @@ makes the recovery exact: a killed replica's requests finish elsewhere
 with the token stream an uninterrupted run would have produced, no
 tokens lost or duplicated.
 
+RESILIENCE (serving.resilience).  Each failover spends one unit of a
+request's retry budget (`MOZART_RETRY_BUDGET`); a request that keeps
+landing on dying replicas is marked `finish_reason="poison"` instead of
+being requeued forever — one poison request cannot take the whole fleet
+down replica by replica.  Killing the LAST healthy replica no longer
+raises: everything it held is PARKED on the cluster (surfaced as
+`n_unrouted` in `ClusterMetrics`), submissions during the outage park
+too, and `restart_replica(i)` — which rebuilds the replica's engine and
+page pool from the stored construction args — rejoins it to the healthy
+set and drains the parked queue through the router, completing every
+held request token-exactly.  A `Watchdog` runs every cluster step: a
+replica that holds work but emits no tokens for
+`MOZART_WATCHDOG_STALL_STEPS` steps, or whose engine flagged non-finite
+decode logits (`health["nan_detected"]`, see the engine's jitted
+guard), is QUARANTINED exactly like `kill_replica`.  `stall_replica` /
+`unstall_replica` wedge a replica without killing it (it keeps its work
+and makes no progress) — the fault `ChaosSchedule`'s "stall" events
+inject and the watchdog must catch.  Bounded per-replica queues
+(`MOZART_QUEUE_BOUND`) give backpressure: the router skips full
+replicas, and when every healthy replica's queue is full the submission
+is shed (`finish_reason="shed"`) instead of buffered without bound.
+
 `LoadGenerator` is an OPEN-LOOP Poisson source (seeded): arrival times
 are drawn up front, independent of service times — the arrival process a
 fleet sized for heavy traffic actually faces, and the one that exposes
@@ -54,7 +76,7 @@ import numpy as np
 from repro.launch import knobs
 from repro.models.config import ModelConfig
 
-from . import workload
+from . import resilience, workload
 from .engine import Request, ServingEngine
 
 ROUTER_POLICIES = ("round_robin", "least_loaded", "shortest_queue")
@@ -118,6 +140,9 @@ class LoadGenerator:
     seed: int = 0
     max_new_tokens: int = 16
     bands: tuple[tuple[int, int], ...] = workload.DEFAULT_BANDS
+    # per-request SLO mix (see workload.DEFAULT_DEADLINE_BANDS); None
+    # keeps the historical no-deadline trace byte-identical
+    deadline_bands: tuple[tuple[float, float] | None, ...] | None = None
 
     def schedule(self) -> list[tuple[float, Request]]:
         """[(arrival_offset_seconds, request)], arrival-sorted.  One rng
@@ -129,6 +154,7 @@ class LoadGenerator:
             self.vocab,
             bands=self.bands,
             max_new_tokens=self.max_new_tokens,
+            deadline_bands=self.deadline_bands,
         )
         times = workload.poisson_arrivals(rng, self.n_requests, self.rate)
         return list(zip(times.tolist(), reqs))
@@ -166,12 +192,21 @@ class ClusterMetrics:
             for r in reqs
             if r.t_done is not None and r.t_first is not None and len(r.out_tokens) > 1
         ]
+        with_dl = [
+            r
+            for r in reqs
+            if r.deadline_s is not None
+            and r.t_done is not None
+            and r.finish_reason not in ("shed", "poison", "rejected")
+        ]
         return {
             "ttft_p50_ms": cls._pct_ms(ttft, 50),
             "ttft_p99_ms": cls._pct_ms(ttft, 99),
             "tpot_p50_ms": cls._pct_ms(tpot, 50),
             "tpot_p99_ms": cls._pct_ms(tpot, 99),
             "n_finished": sum(1 for r in reqs if r.t_done is not None),
+            "deadline_met": sum(1 for r in with_dl if r.t_done - r.t_submit <= r.deadline_s),
+            "deadline_missed": sum(1 for r in with_dl if r.t_done - r.t_submit > r.deadline_s),
         }
 
     def summary(self, cluster: "ServingCluster") -> dict:
@@ -195,11 +230,24 @@ class ClusterMetrics:
         agg.update(
             n_replicas=len(cluster.replicas),
             router=cluster.router.policy,
-            tokens_out=sum(r["tokens_out"] for r in per_replica),
-            preemptions=sum(r["preemptions"] for r in per_replica),
-            rejected=sum(r["rejected"] for r in per_replica),
+            # engines retired by restart_replica fold their counters
+            # back in — a rebuild never loses serving history
+            tokens_out=sum(r["tokens_out"] for r in per_replica) + cluster._retired["tokens_out"],
+            preemptions=sum(r["preemptions"] for r in per_replica)
+            + cluster._retired["preemptions"],
+            rejected=sum(r["rejected"] for r in per_replica) + cluster._retired["rejected"],
             requeued=cluster.stats["requeued"],
             replica_failures=cluster.stats["replica_failures"],
+            # resilience surface: requests currently HELD because no
+            # replica is healthy, plus shed/poison/watchdog counters
+            n_unrouted=len(cluster.parked),
+            shed=cluster.stats["shed"]
+            + cluster._retired["shed"]
+            + sum(e.stats["shed"] for e in cluster.replicas),
+            poisoned=cluster.stats["poisoned"],
+            quarantined=cluster.stats["quarantined"],
+            restarts=cluster.stats["restarts"],
+            goodput_tokens=resilience.goodput_tokens(cluster.requests),
             peak_queue_depth=max(
                 (sum(t) for t in self.series["queue_depth"]), default=0
             ),
@@ -228,6 +276,8 @@ class ServingCluster:
         n_replicas: int | None = None,
         router: Router | str | None = None,
         mesh=None,
+        retry_budget: int | None = None,
+        watchdog: resilience.Watchdog | None = None,
         **engine_kwargs,
     ):
         n = n_replicas or knobs.get_int("MOZART_REPLICAS")
@@ -239,6 +289,12 @@ class ServingCluster:
             meshes = replica_meshes(mesh, n)
         else:
             meshes = [None] * n
+        # restart_replica rebuilds a dead replica's engine (fresh page
+        # pool, clean health flags) from exactly these construction args
+        self._mcfg = mcfg
+        self._params = params
+        self._meshes = meshes
+        self._engine_kwargs = dict(engine_kwargs)
         self.replicas = [
             ServingEngine(mcfg, params, mesh=meshes[i], **engine_kwargs)
             for i in range(n)
@@ -248,28 +304,87 @@ class ServingCluster:
         self.requests: list[Request] = []
         self.assignment: dict[int, int] = {}  # rid -> serving replica
         self.metrics = ClusterMetrics(n)
-        self.stats = {"requeued": 0, "replica_failures": 0, "steps": 0}
+        self.retry_budget = (
+            retry_budget if retry_budget is not None else knobs.get_int("MOZART_RETRY_BUDGET")
+        )
+        self.watchdog = watchdog or resilience.Watchdog(n)
+        # requests HELD while zero replicas are healthy (total outage):
+        # restart_replica drains them; surfaced as n_unrouted in metrics
+        self.parked: list[Request] = []
+        # chaos-wedged replicas: healthy but skipped by step() — they
+        # hold their work and make no progress until the watchdog acts
+        self.stalled: set[int] = set()
+        self.stats = {
+            "requeued": 0,
+            "replica_failures": 0,
+            "steps": 0,
+            "shed": 0,
+            "poisoned": 0,
+            "quarantined": 0,
+            "restarts": 0,
+            "unrouted_total": 0,
+        }
+        # counters of engines retired by restart_replica, folded back
+        # into the metrics aggregate so a rebuild never loses history
+        self._retired = {"tokens_out": 0, "preemptions": 0, "rejected": 0, "shed": 0}
 
     # -- request lifecycle ---------------------------------------------------
 
     def submit(self, req: Request) -> int:
-        """Route one request to a healthy replica; returns its index."""
-        i = self.router.pick(self.replicas, self.healthy)
+        """Route one request to a healthy replica; returns its index.
+        With zero healthy replicas the request is PARKED (-1) until a
+        restart; with every healthy queue full it is SHED (-1)."""
         if req.t_submit is None:
             req.t_submit = time.monotonic()
         self.requests.append(req)
+        if not self.healthy:
+            self.parked.append(req)
+            self.stats["unrouted_total"] += 1
+            return -1
+        # backpressure: bounded queues take a replica out of the routable
+        # set; a fleet with every queue full sheds instead of buffering
+        routable = [i for i in self.healthy if not self.replicas[i].queue_full]
+        if not routable:
+            req.done = True
+            req.finish_reason = "shed"
+            req.t_done = time.monotonic()
+            self.stats["shed"] += 1
+            return -1
+        i = self.router.pick(self.replicas, routable)
         self.assignment[req.rid] = i
         self.replicas[i].submit(req)
         return i
 
+    def _requeue(self, req: Request) -> None:
+        """Failover path: spend one retry, then park (no healthy
+        replica) or front-queue on a survivor.  A request that exhausts
+        its retry budget is POISON — it has now taken down (or been
+        caught in) `retry_budget`+1 replicas and must not be given
+        another one to crash."""
+        req.requeues += 1
+        if self.retry_budget >= 0 and req.requeues > self.retry_budget:
+            req.done = True
+            req.finish_reason = "poison"
+            req.t_done = time.monotonic()
+            self.stats["poisoned"] += 1
+            return
+        if not self.healthy:
+            self.parked.append(req)
+            self.stats["unrouted_total"] += 1
+            return
+        j = self.router.pick(self.replicas, self.healthy)
+        self.assignment[req.rid] = j
+        self.replicas[j].queue.insert(0, req)
+        self.stats["requeued"] += 1
+
     def kill_replica(self, i: int) -> int:
         """Fail replica `i`: requeue everything it held onto the
         survivors (in-flight slots resume via the engines' re-prefill
-        path).  Returns the number of requests re-routed."""
+        path), or PARK it on the cluster when no survivor exists (total
+        outage — `restart_replica` drains the parked queue later).
+        Returns the number of requests re-routed or parked."""
         if i not in self.healthy:
             return 0
-        if len(self.healthy) == 1:
-            raise RuntimeError("cannot kill the last healthy replica")
         self.healthy.remove(i)
         eng = self.replicas[i]
         stranded: list[Request] = []
@@ -287,12 +402,63 @@ class ServingCluster:
         for req in stranded:
             if req.done:
                 continue
+            self._requeue(req)
+        self.stats["replica_failures"] += 1
+        return len(stranded)
+
+    def restart_replica(self, i: int) -> int:
+        """Recover replica `i`: rebuild its engine (fresh page pool,
+        clean health flags) from the stored construction args, rejoin
+        the healthy set so the router picks it up, and drain any parked
+        (total-outage) requests back through the router.  Returns the
+        number of parked requests drained."""
+        if i in self.healthy:
+            return 0
+        old = self.replicas[i]
+        for key in self._retired:
+            self._retired[key] += old.stats[key]
+        self.replicas[i] = ServingEngine(
+            self._mcfg, self._params, mesh=self._meshes[i], **self._engine_kwargs
+        )
+        self.healthy.append(i)
+        self.healthy.sort()
+        self.stalled.discard(i)
+        self.watchdog.reset(i)
+        self.stats["restarts"] += 1
+        parked, self.parked = self.parked, []
+        drained = 0
+        # front-of-queue priority, original order preserved: the parked
+        # requests waited out the outage and resume token-exactly
+        for req in reversed(parked):
+            if req.done:
+                continue
             j = self.router.pick(self.replicas, self.healthy)
             self.assignment[req.rid] = j
             self.replicas[j].queue.insert(0, req)
             self.stats["requeued"] += 1
-        self.stats["replica_failures"] += 1
-        return len(stranded)
+            drained += 1
+        return drained
+
+    # -- fault injection / watchdog ------------------------------------------
+
+    def stall_replica(self, i: int) -> None:
+        """Wedge replica `i` (chaos): it stays 'healthy' and keeps its
+        queue and slots but step() skips it — the hung-host failure mode
+        the watchdog must detect by missing token progress."""
+        self.stalled.add(i)
+
+    def unstall_replica(self, i: int) -> None:
+        self.stalled.discard(i)
+
+    def quarantine(self, i: int, reason: str) -> int:
+        """Watchdog action: exactly `kill_replica` (token-exact requeue
+        of everything held) plus the quarantine bookkeeping."""
+        if i not in self.healthy:
+            return 0
+        moved = self.kill_replica(i)
+        self.stats["quarantined"] += 1
+        self.watchdog.events.append((self.stats["steps"], i, reason))
+        return moved
 
     # -- drive loops ---------------------------------------------------------
 
@@ -305,38 +471,66 @@ class ServingCluster:
         )
 
     def step(self) -> int:
-        """One round-robin pass: every healthy replica with work takes
-        one engine step.  Returns the number of active slots stepped."""
+        """One round-robin pass: every healthy, unstalled replica with
+        work takes one engine step, then the watchdog scans for sick
+        replicas and quarantines them (token-exact requeue).  Returns
+        the number of active slots stepped."""
         active = 0
         for i in self.healthy:
+            if i in self.stalled:
+                continue
             eng = self.replicas[i]
             if eng.queue or any(s is not None for s in eng.slots):
                 active += eng.step()
+        for i in list(self.healthy):
+            reason = self.watchdog.check(i, self.replicas[i])
+            if reason is not None:
+                self.quarantine(i, reason)
         self.metrics.tick(self.replicas)
         self.stats["steps"] += 1
         return active
 
-    def run(self, max_steps: int = 100_000) -> None:
+    def run(self, max_steps: int = 100_000, chaos=None) -> None:
+        """Closed-loop drive to completion.  `chaos` (a
+        `resilience.ChaosSchedule`) fires its events keyed to
+        `stats["steps"]` before each step.  A TOTAL OUTAGE (zero healthy
+        replicas, nothing left that could revive them) returns instead
+        of raising: unfinished requests stay parked — surfaced as
+        `n_unrouted` — for a later `restart_replica` to drain."""
         steps = 0
-        while self.pending_work and steps < max_steps:
+        while steps < max_steps:
+            if chaos is not None:
+                chaos.apply(self, self.stats["steps"])
+            if not (self.pending_work or (chaos is not None and chaos.pending)):
+                break
             self.step()
             steps += 1
 
-    def drive(self, schedule: list[tuple[float, Request]], max_steps: int = 1_000_000):
+    def drive(self, schedule: list[tuple[float, Request]], max_steps: int = 1_000_000, chaos=None):
         """Open-loop replay: submit each request at (or after) its
         arrival offset while continuously stepping the replicas; idle
-        gaps sleep until the next arrival instead of spinning."""
+        gaps sleep until the next arrival instead of spinning.  `chaos`
+        events fire against the step counter, exactly as in `run`."""
         t0 = time.monotonic()
         idx, steps = 0, 0
         n = len(schedule)
-        while (idx < n or self.pending_work) and steps < max_steps:
+        while steps < max_steps:
+            if chaos is not None:
+                chaos.apply(self, self.stats["steps"])
             now = time.monotonic() - t0
             while idx < n and schedule[idx][0] <= now:
                 self.submit(schedule[idx][1])
                 idx += 1
+            if not (idx < n or self.pending_work or (chaos is not None and chaos.pending)):
+                break
             if self.pending_work:
                 self.step()
                 steps += 1
             elif idx < n:
                 time.sleep(min(max(schedule[idx][0] - now, 0.0), 0.05))
+            else:
+                # only chaos events remain (e.g. a scheduled restart
+                # that will drain the parked queue): let them fire
+                self.step()
+                steps += 1
         return self.metrics.summary(self)

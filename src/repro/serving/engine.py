@@ -45,7 +45,26 @@ Requests carry wall-clock marks (`t_submit`/`t_first`/`t_done`) so the
 serving benchmark can report TTFT/TPOT percentiles, and a
 `finish_reason` ("eos", "max_new_tokens", "length" at the cache
 boundary, "rejected" for prompts that cannot fit, "capacity" when a lone
-request exhausts the page pool).
+request exhausts the page pool, "shed" for deadline/overload shedding,
+"poison" when a request exhausts its cluster retry budget).
+
+SLO RESILIENCE.  Requests may carry a `deadline_s` (seconds from
+submission).  Admission is deadline-aware: the queue drains
+earliest-deadline-first (resumed requests keep their front priority so
+preemption/failover recovery stays token-exact; FIFO among requests
+without deadlines), and a request whose deadline has already passed —
+or whose remaining budget cannot fit its remaining tokens at the
+engine's measured per-step pace — is SHED at admission
+(`finish_reason="shed"`) instead of wasting decode lanes on tokens
+nobody can use (`MOZART_DEADLINE_SHED=0` disables the feasibility
+check).  `queue_bound` (`MOZART_QUEUE_BOUND`) bounds the queue: a full
+queue sheds new submissions instead of growing without bound —
+backpressure the cluster router reads to route around hot replicas.
+Every decode's logits pass a cheap jitted all-finite guard
+(`MOZART_WATCHDOG_NAN`) BEFORE sampling: non-finite logits set
+`health["nan_detected"]` and the step emits nothing, so corrupted KV
+can never leak garbage tokens — the cluster watchdog quarantines the
+replica and the requeue path recovers its requests token-exactly.
 """
 from __future__ import annotations
 
@@ -62,6 +81,7 @@ from repro.launch import knobs
 from repro.models import api
 from repro.models.config import ModelConfig
 from . import paged as paged_kv
+from . import resilience
 from .sampling import sample
 
 Params = Any
@@ -73,6 +93,9 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    # SLO deadline in seconds from t_submit; None = no deadline.  The
+    # engine sheds the request at admission when it cannot be met.
+    deadline_s: float | None = None
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     finish_reason: str | None = None
@@ -81,6 +104,7 @@ class Request:
     t_first: float | None = None
     t_done: float | None = None
     admit_seq: int = -1           # engine admission order (preemption picks max)
+    requeues: int = 0             # failovers survived (cluster retry budget)
 
 
 def _tree_set_slot(batched, single, b: int):
@@ -158,7 +182,10 @@ class ServingEngine:
                  compact: bool | None = None, mesh=None,
                  paged: bool | None = None, page_size: int | None = None,
                  num_pages: int | None = None,
-                 kv_quant: bool | None = None):
+                 kv_quant: bool | None = None,
+                 queue_bound: int | None = None,
+                 guard_nan: bool | None = None,
+                 shed_deadlines: bool | None = None):
         self.mcfg = mcfg
         self.params = params
         self.max_batch = max_batch
@@ -187,6 +214,18 @@ class ServingEngine:
         self._next_slot = 0           # rotation cursor: a SLOT ID
         self.eos_id = eos_id
         self._admit_counter = 0
+        # -- resilience knobs: bounded queue, deadline shedding, NaN guard --
+        self.queue_bound = queue_bound if queue_bound is not None \
+            else knobs.get_int("MOZART_QUEUE_BOUND")
+        self.guard_nan = guard_nan if guard_nan is not None \
+            else knobs.get_bool("MOZART_WATCHDOG_NAN")
+        self.shed_deadlines = shed_deadlines if shed_deadlines is not None \
+            else knobs.get_bool("MOZART_DEADLINE_SHED")
+        # a sick engine raises flags here instead of raising exceptions;
+        # the cluster watchdog reads them and quarantines the replica
+        self.health = {"nan_detected": False}
+        # EWMA of step wall time: the deadline-feasibility estimate
+        self._est_step_s = 0.0
         if self.paged:
             ps = page_size or knobs.get_int("MOZART_KV_PAGE_SIZE")
             self.pool = paged_kv.PagePool(
@@ -237,13 +276,30 @@ class ServingEngine:
             else None
         self.stats = {"decode_steps": 0, "prefills": 0,
                       "tokens_out": 0, "slot_occupancy": [],
-                      "preemptions": 0, "rejected": 0}
+                      "preemptions": 0, "rejected": 0,
+                      "shed": 0, "nan_steps": 0}
 
     # -- request lifecycle --------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request; returns False when the bounded queue sheds it
+        (`finish_reason="shed"`) instead — backpressure, not growth."""
         if req.t_submit is None:
             req.t_submit = time.monotonic()
+        if self.queue_bound > 0 and len(self.queue) >= self.queue_bound:
+            self._shed(req)
+            return False
         self.queue.append(req)
+        return True
+
+    @property
+    def queue_full(self) -> bool:
+        return self.queue_bound > 0 and len(self.queue) >= self.queue_bound
+
+    def _shed(self, req: Request) -> None:
+        req.done = True
+        req.finish_reason = "shed"
+        req.t_done = time.monotonic()
+        self.stats["shed"] += 1
 
     def _slot_pos(self, b: int) -> int:
         """Cache length of slot b = prompt + decoded-in KV.  The newest
@@ -272,6 +328,45 @@ class ServingEngine:
         self.queue.insert(0, req)
         self.stats["preemptions"] += 1
 
+    def _admission_key(self, j: int) -> tuple:
+        """Queue drain order: resumed requests first (their front-of-queue
+        priority keeps preemption/failover recovery token-exact), then
+        earliest deadline (None sorts last), then submission order — so a
+        queue with no deadlines drains exactly like the old FIFO."""
+        req = self.queue[j]
+        dl = req.deadline_s
+        return (0 if req.out_tokens else 1,
+                dl if dl is not None else float("inf"), j)
+
+    def _deadline_infeasible(self, req: Request) -> bool:
+        """True when `req` can no longer meet its deadline: it already
+        expired, or the remaining budget cannot fit the remaining tokens
+        at the engine's measured per-step pace (EWMA; until a first
+        measurement exists only hard-expired requests are shed)."""
+        if not self.shed_deadlines or req.deadline_s is None:
+            return False
+        now = time.monotonic()
+        remaining = (req.t_submit or now) + req.deadline_s - now
+        if remaining <= 0:
+            return True
+        left = max(req.max_new_tokens - len(req.out_tokens), 0)
+        return self._est_step_s > 0.0 and self._est_step_s * left > remaining
+
+    def _next_admission(self) -> int | None:
+        """Index of the next queue entry to admit (deadline-aware), or
+        None when the queue is empty.  Requests that cannot meet their
+        deadline any more are shed here — admission control — instead of
+        occupying a slot to produce tokens past their SLO."""
+        while self.queue:
+            j = min(range(len(self.queue)), key=self._admission_key)
+            req = self.queue[j]
+            if self._deadline_infeasible(req):
+                self.queue.pop(j)
+                self._shed(req)
+                continue
+            return j
+        return None
+
     def _admit(self) -> None:
         """Prefill queued requests into free slots (continuous batching).
         Prompts that could never decode a single token inside the cache
@@ -279,7 +374,10 @@ class ServingEngine:
         for b in range(self.max_batch):
             if self.slots[b] is not None or not self.queue:
                 continue
-            req = self.queue[0]
+            qi = self._next_admission()
+            if qi is None:
+                break
+            req = self.queue[qi]
             resumed = bool(req.out_tokens)
             if resumed:
                 # re-prefill everything but the newest token (whose KV
@@ -291,7 +389,7 @@ class ServingEngine:
                 seq = np.asarray(req.prompt, np.int32)
             plen = len(seq)
             if plen < 1 or plen >= self.capacity:
-                self.queue.pop(0)
+                self.queue.pop(qi)
                 req.done = True
                 req.finish_reason = "rejected"
                 req.t_done = time.monotonic()
@@ -308,7 +406,7 @@ class ServingEngine:
                 idx_vec = self.cache["index"]
                 self.cache = _tree_set_slot(self.cache, cache1, b)
                 self.cache["index"] = idx_vec.at[b].set(plen)
-            self.queue.pop(0)
+            self.queue.pop(qi)
             self.slots[b] = req
             req.admit_seq = self._admit_counter
             self._admit_counter += 1
@@ -366,6 +464,11 @@ class ServingEngine:
     # -- decode tick ---------------------------------------------------------
     def step(self) -> int:
         """One lock-step decode over active slots; returns #active."""
+        if self.health["nan_detected"]:
+            # sick engine: hold all state for the watchdog's quarantine
+            # (the requeue path recovers every request token-exactly)
+            return 0
+        t_step = time.monotonic()
         self._admit()
         live = [b for b, r in enumerate(self.slots) if r is not None]
         # cache-boundary: a slot whose next KV write would land at or past
@@ -409,6 +512,13 @@ class ServingEngine:
                 self.cache["index"] = _rewind_inactive(
                     self.cache["index"], inactive)
             lane = {b: b for b in active}
+        if self.guard_nan and not resilience.logits_finite(logits):
+            # corrupted KV / sick kernel: emit NOTHING from non-finite
+            # logits (garbage tokens would poison the requests' streams
+            # beyond token-exact recovery); flag for the watchdog
+            self.health["nan_detected"] = True
+            self.stats["nan_steps"] += 1
+            return 0
         self.stats["decode_steps"] += 1
         self.stats["slot_occupancy"].append(
             len(live) / self.max_batch)
@@ -424,6 +534,11 @@ class ServingEngine:
                     tok == self.eos_id:
                 self._finish(b, "eos" if tok == self.eos_id
                              else "max_new_tokens")
+        dt = time.monotonic() - t_step
+        # EWMA per-step pace: the deadline-feasibility estimate _admit
+        # sheds against (first measurement seeds it directly)
+        self._est_step_s = dt if self._est_step_s == 0.0 \
+            else 0.8 * self._est_step_s + 0.2 * dt
         return len(active)
 
     def _grow_pages(self, live: list[int]) -> list[int]:
@@ -472,5 +587,9 @@ class ServingEngine:
         steps = 0
         while (self.queue or any(s is not None for s in self.slots)) \
                 and steps < max_steps:
+            if self.health["nan_detected"]:
+                # a standalone sick engine stops instead of spinning;
+                # under a cluster the watchdog quarantines it first
+                break
             self.step()
             steps += 1

@@ -37,6 +37,16 @@ def zipf_band_weights(n_bands: int) -> np.ndarray:
     return w / w.sum()
 
 
+# an SLO mix in the fig12 spirit: most traffic is best-effort (None),
+# a band of interactive requests carries tight-ish deadlines, a band of
+# batch requests carries loose ones.  Seconds; None = no deadline.
+DEFAULT_DEADLINE_BANDS: tuple[tuple[float, float] | None, ...] = (
+    None,
+    (0.5, 2.0),
+    (10.0, 30.0),
+)
+
+
 def zipf_mix_requests(
     rng: np.random.Generator,
     n: int,
@@ -45,23 +55,39 @@ def zipf_mix_requests(
     bands: tuple[tuple[int, int], ...] = DEFAULT_BANDS,
     max_new_tokens: int = 16,
     rid0: int = 0,
+    deadline_bands: tuple[tuple[float, float] | None, ...] | None = None,
 ) -> list[Request]:
     """`n` requests with Zipf-weighted prompt lengths over `bands`.
 
     Draw order per request: band choice, prompt length, prompt tokens —
     fixed, so a seeded `rng` reproduces the exact trace everywhere.
+    `deadline_bands` (e.g. `DEFAULT_DEADLINE_BANDS`) adds a per-request
+    SLO mix: a uniformly chosen band, then a uniform `deadline_s` inside
+    it (`None` bands mean no deadline).  Deadlines draw from a SPAWNED
+    child generator, never from `rng`'s own stream, so attaching an SLO
+    mix leaves the prompt trace (and any draws the caller makes from
+    `rng` afterwards, e.g. Poisson arrivals) byte-for-byte unchanged —
+    and `deadline_bands=None` is the exact historical trace.
     """
     weights = zipf_band_weights(len(bands))
+    dl_rng = rng.spawn(1)[0] if deadline_bands is not None else None
     reqs = []
     for i in range(n):
         lo, hi = bands[int(rng.choice(len(bands), p=weights))]
+        deadline = None
+        prompt = rng.integers(0, vocab, size=int(rng.integers(lo, hi + 1))).astype(
+            np.int32
+        )
+        if dl_rng is not None:
+            band = deadline_bands[int(dl_rng.integers(0, len(deadline_bands)))]
+            if band is not None:
+                deadline = float(dl_rng.uniform(band[0], band[1]))
         reqs.append(
             Request(
                 rid=rid0 + i,
-                prompt=rng.integers(0, vocab, size=int(rng.integers(lo, hi + 1))).astype(
-                    np.int32
-                ),
+                prompt=prompt,
                 max_new_tokens=max_new_tokens,
+                deadline_s=deadline,
             )
         )
     return reqs

@@ -227,10 +227,18 @@ def test_kill_replica_finishes_elsewhere_with_exact_tokens(tiny_params):
 
 
 def test_kill_replica_guards(tiny_params):
+    """ISSUE-9 semantics: killing the LAST healthy replica no longer
+    raises — its work parks on the cluster for a later restart."""
     cl = _mk_cluster(tiny_params)
+    reqs = _mk_requests(2, seed=6)
+    for r in reqs:
+        cl.submit(r)
+    cl.step()
     cl.kill_replica(0)
-    with pytest.raises(RuntimeError):
-        cl.kill_replica(1)  # cannot kill the last healthy replica
+    cl.kill_replica(1)  # total outage: parks, does not raise
+    assert not cl.healthy
+    assert len(cl.parked) == sum(1 for r in reqs if not r.done)
+    assert cl.metrics.summary(cl)["aggregate"]["n_unrouted"] == len(cl.parked)
     assert cl.kill_replica(0) == 0  # already dead: no-op
 
 

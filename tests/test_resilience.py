@@ -1,0 +1,412 @@
+"""Tier-1 tests for the SLO-aware resilience layer (ISSUE-9).
+
+Covers the acceptance surface: deadline plumbing and the EDF admission
+order (exact FIFO when no deadlines exist, resumed requests first so
+recovery stays token-exact), admission-control shedding of infeasible
+deadlines, bounded queues with cluster-level backpressure shed, the
+total-outage contract (park — never raise — then restart and finish
+token-exactly), retry budgets classifying serial failovers as poison,
+the watchdog (stall detection by missing token progress, NaN-flag
+surfacing) with token-exact recovery after quarantine, the jitted
+non-finite logits guard, NaN injection into live KV, the seeded
+`ChaosSchedule` determinism, the deadline-band workload mix (and that
+`deadline_bands=None` reproduces the historical trace byte-for-byte),
+and the goodput accounting the chaos gate relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.serving import resilience, workload
+from repro.serving.cluster import ServingCluster
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.resilience import (
+    ChaosEvent,
+    ChaosSchedule,
+    Watchdog,
+    goodput_tokens,
+    goodput_violations,
+    inject_nan,
+    logits_finite,
+)
+
+TINY = ModelConfig(
+    name="tiny-resilience",
+    n_layers=2,
+    d_model=32,
+    n_heads=4,
+    kv_heads=2,
+    head_dim=8,
+    d_ff=64,
+    vocab=61,
+    dtype="float32",
+    param_dtype="float32",
+    scan_layers=False,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return api.init_params(TINY, jax.random.PRNGKey(0))
+
+
+def _mk_requests(n, seed=3, max_new=6, bands=((4, 9), (10, 14)), **kw):
+    rng = np.random.default_rng(seed)
+    return workload.zipf_mix_requests(
+        rng, n, TINY.vocab, bands=bands, max_new_tokens=max_new, **kw
+    )
+
+
+def _req(rid, deadline_s=None, max_new=4, plen=4):
+    prompt = np.arange(plen, dtype=np.int32) + 1
+    return Request(rid=rid, prompt=prompt, max_new_tokens=max_new, deadline_s=deadline_s)
+
+
+def _mk_engine(params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("num_pages", 33)
+    return ServingEngine(TINY, params, **kw)
+
+
+def _mk_cluster(params, **kw):
+    kw.setdefault("n_replicas", 2)
+    kw.setdefault("router", "round_robin")
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("num_pages", 33)
+    return ServingCluster(TINY, params, **kw)
+
+
+def _reference_tokens(params, reqs):
+    eng = _mk_engine(params)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [list(r.out_tokens) for r in reqs]
+
+
+# -- deadlines: workload mix, EDF admission, shedding -------------------------
+
+
+def test_deadline_bands_leave_historical_trace_unchanged():
+    """Deadline draws come from a spawned child generator, so attaching
+    an SLO mix must NOT move the prompt draws (nor any draws the caller
+    makes from the same rng afterwards, e.g. Poisson arrivals): the
+    PR-8 fixed-seed traces stay byte-for-byte intact."""
+    r_old, r_new = np.random.default_rng(7), np.random.default_rng(7)
+    old = workload.zipf_mix_requests(r_old, 10, TINY.vocab)
+    new = workload.zipf_mix_requests(
+        r_new, 10, TINY.vocab, deadline_bands=workload.DEFAULT_DEADLINE_BANDS
+    )
+    assert all(np.array_equal(a.prompt, b.prompt) for a, b in zip(old, new))
+    assert all(r.deadline_s is None for r in old)
+    # the caller's continuation stream (arrival draws) is untouched too
+    assert np.array_equal(
+        workload.poisson_arrivals(r_old, 5, 10.0), workload.poisson_arrivals(r_new, 5, 10.0)
+    )
+
+
+def test_deadline_band_mix_is_seeded_and_in_band():
+    bands = workload.DEFAULT_DEADLINE_BANDS
+    a = _mk_requests(40, seed=11, deadline_bands=bands)
+    b = _mk_requests(40, seed=11, deadline_bands=bands)
+    assert [r.deadline_s for r in a] == [r.deadline_s for r in b]
+    live = [r.deadline_s for r in a if r.deadline_s is not None]
+    assert live, "the mix never drew a deadline band"
+    assert any(r.deadline_s is None for r in a)
+    for d in live:
+        assert any(band is not None and band[0] <= d <= band[1] for band in bands)
+
+
+def test_edf_admission_order_and_fifo_fallback(tiny_params):
+    eng = _mk_engine(tiny_params)
+    # no deadlines anywhere -> exact FIFO (submission order)
+    for rid in range(3):
+        eng.submit(_req(rid))
+    assert eng.queue[eng._next_admission()].rid == 0
+    eng.queue.clear()
+    # tightest deadline first; None sorts after every real deadline
+    for rid, dl in ((0, None), (1, 9.0), (2, 3.0)):
+        eng.submit(_req(rid, deadline_s=dl))
+    order = []
+    while eng.queue:
+        j = eng._next_admission()
+        order.append(eng.queue.pop(j).rid)
+    assert order == [2, 1, 0]
+    # a resumed request (failover/preemption, has out_tokens) beats even
+    # the tightest fresh deadline: recovery priority is what keeps the
+    # kill/requeue path token-exact
+    resumed = _req(7)
+    resumed.out_tokens.append(5)
+    eng.submit(_req(8, deadline_s=0.5))
+    eng.submit(resumed)
+    assert eng.queue[eng._next_admission()].rid == 7
+
+
+def test_expired_deadline_is_shed_at_admission(tiny_params):
+    eng = _mk_engine(tiny_params)
+    doomed = _req(0, deadline_s=1e-9)
+    fine = _req(1)
+    eng.submit(doomed)
+    eng.submit(fine)
+    eng.run()
+    assert doomed.finish_reason == "shed" and not doomed.out_tokens
+    assert fine.done and len(fine.out_tokens) == 4
+    assert eng.stats["shed"] == 1
+
+
+def test_pace_infeasible_deadline_is_shed(tiny_params):
+    """Once the EWMA pace exists, a deadline that cannot fit the
+    remaining tokens is shed without wasting a slot on it."""
+    eng = _mk_engine(tiny_params)
+    eng.submit(_req(0))
+    eng.run()
+    assert eng._est_step_s > 0.0
+    # feasible remaining time for ~0 tokens, infeasible for 1000
+    slow = _req(1, deadline_s=eng._est_step_s * 5, max_new=1000)
+    assert eng._deadline_infeasible(slow)
+    assert not eng._deadline_infeasible(_req(2, deadline_s=60.0, max_new=1))
+    assert not eng._deadline_infeasible(_req(3, max_new=1000))  # no deadline
+
+
+def test_shed_disabled_keeps_expired_deadlines(tiny_params):
+    eng = _mk_engine(tiny_params, shed_deadlines=False)
+    req = _req(0, deadline_s=1e-9, max_new=2)
+    eng.submit(req)
+    eng.run()
+    assert req.done and req.finish_reason != "shed"
+    assert len(req.out_tokens) == 2
+
+
+# -- bounded queues / backpressure --------------------------------------------
+
+
+def test_engine_queue_bound_sheds(tiny_params):
+    eng = _mk_engine(tiny_params, queue_bound=2)
+    reqs = _mk_requests(4, seed=5)
+    accepted = [eng.submit(r) for r in reqs]
+    assert accepted == [True, True, False, False]
+    assert eng.queue_full
+    assert all(r.finish_reason == "shed" for r in reqs[2:])
+    eng.run()
+    assert all(r.done for r in reqs[:2])
+    assert eng.stats["shed"] == 2
+
+
+def test_cluster_backpressure_sheds_when_all_queues_full(tiny_params):
+    cl = _mk_cluster(tiny_params, queue_bound=1)
+    reqs = _mk_requests(4, seed=5)
+    picks = [cl.submit(r) for r in reqs]
+    # one per replica queue, then every healthy queue is full -> shed
+    assert picks[:2] == [0, 1] and picks[2:] == [-1, -1]
+    assert all(r.finish_reason == "shed" for r in reqs[2:])
+    cl.run()
+    agg = cl.metrics.summary(cl)["aggregate"]
+    assert agg["shed"] == 2
+    assert all(r.done for r in reqs)
+
+
+# -- total outage / restart ---------------------------------------------------
+
+
+def test_total_outage_parks_then_restart_finishes_exact(tiny_params):
+    reqs = _mk_requests(4, seed=9)
+    want = _reference_tokens(tiny_params, _mk_requests(4, seed=9))
+    cl = _mk_cluster(tiny_params)
+    for r in reqs:
+        cl.submit(r)
+    for _ in range(2):
+        cl.step()
+    cl.kill_replica(0)
+    cl.kill_replica(1)  # total outage — must hold, not raise
+    cl.run()  # nothing healthy: returns immediately
+    assert not cl.healthy
+    held = len(cl.parked)
+    assert held == sum(1 for r in reqs if not r.done) > 0
+    agg = cl.metrics.summary(cl)["aggregate"]
+    assert agg["n_unrouted"] == held
+    # submissions during the outage park too
+    late = _req(99, max_new=3, plen=5)
+    assert cl.submit(late) == -1
+    assert len(cl.parked) == held + 1
+    drained = cl.restart_replica(0)
+    assert drained == held + 1 and not cl.parked
+    cl.run()
+    assert all(r.done for r in reqs) and late.done
+    assert [list(r.out_tokens) for r in reqs] == want
+    assert cl.stats["restarts"] == 1
+
+
+def test_restart_rejoins_router_and_folds_stats(tiny_params):
+    cl = _mk_cluster(tiny_params)
+    reqs = _mk_requests(4, seed=2)
+    for r in reqs:
+        cl.submit(r)
+    for _ in range(2):
+        cl.step()
+    before = cl.metrics.summary(cl)["aggregate"]["tokens_out"]
+    cl.kill_replica(0)
+    assert cl.restart_replica(0) == 0  # nothing parked to drain
+    assert cl.healthy == [0, 1]
+    assert cl.restart_replica(0) == 0  # already healthy: no-op
+    cl.run()
+    assert all(r.done for r in reqs)
+    # the replaced engine's pre-kill counters folded into the aggregate
+    agg = cl.metrics.summary(cl)["aggregate"]
+    assert agg["tokens_out"] >= before
+    assert agg["tokens_out"] >= sum(len(r.out_tokens) for r in reqs)
+    # fresh engine actually took new work after rejoining
+    picks = {cl.submit(r) for r in _mk_requests(4, seed=4)}
+    assert 0 in picks
+    cl.run()
+
+
+def test_retry_budget_exhaustion_poisons(tiny_params):
+    cl = _mk_cluster(tiny_params, n_replicas=3, retry_budget=1)
+    req = _req(0, max_new=8, plen=6)
+    cl.submit(req)
+    cl.step()
+    cl.kill_replica(cl.assignment[req.rid])  # retry 1: requeued
+    assert not req.done and req.requeues == 1
+    cl.kill_replica(cl.assignment[req.rid])  # retry 2: budget blown
+    assert req.done and req.finish_reason == "poison"
+    assert cl.stats["poisoned"] == 1
+    cl.run()  # the survivor keeps serving; poison never re-enters
+    agg = cl.metrics.summary(cl)["aggregate"]
+    assert agg["poisoned"] == 1
+    assert goodput_tokens([req]) == 0
+
+
+# -- watchdog -----------------------------------------------------------------
+
+
+def test_watchdog_quarantines_stall_token_exact(tiny_params):
+    reqs = _mk_requests(6, seed=5)
+    want = _reference_tokens(tiny_params, _mk_requests(6, seed=5))
+    cl = _mk_cluster(tiny_params, watchdog=Watchdog(2, stall_steps=3))
+    for r in reqs:
+        cl.submit(r)
+    for _ in range(2):
+        cl.step()
+    cl.stall_replica(0)
+    cl.run()
+    assert all(r.done for r in reqs)
+    assert [list(r.out_tokens) for r in reqs] == want
+    assert 0 not in cl.healthy
+    assert cl.stats["quarantined"] == 1
+    assert any(why == "stall" and i == 0 for _, i, why in cl.watchdog.events)
+
+
+def test_watchdog_idle_replica_is_not_a_stall(tiny_params):
+    wd = Watchdog(1, stall_steps=2)
+    eng = _mk_engine(tiny_params)
+    for _ in range(5):  # no work at all: never quarantined
+        assert wd.check(0, eng) is None
+    eng.submit(_req(0, max_new=2))
+    assert wd.check(0, eng) is None  # work, no progress: strike 1
+    assert wd.check(0, eng) == "stall"  # strike 2 = stall_steps
+    eng.run()
+    wd.reset(0)
+    assert wd.check(0, eng) is None
+
+
+def test_nan_guard_quarantine_and_exact_recovery(tiny_params):
+    reqs = _mk_requests(6, seed=8)
+    want = _reference_tokens(tiny_params, _mk_requests(6, seed=8))
+    cl = _mk_cluster(tiny_params)
+    for r in reqs:
+        cl.submit(r)
+    for _ in range(2):
+        cl.step()
+    assert inject_nan(cl.replicas[0])
+    cl.run()
+    assert all(r.done for r in reqs)
+    # the guard fired BEFORE sampling: no garbage token ever entered a
+    # stream, so recovery is byte-identical to the undisturbed run
+    assert [list(r.out_tokens) for r in reqs] == want
+    assert cl.replicas[0].health["nan_detected"]
+    assert cl.replicas[0].stats["nan_steps"] >= 1
+    assert any(why == "nan" for _, _, why in cl.watchdog.events)
+    cl.restart_replica(0)
+    assert not cl.replicas[0].health["nan_detected"]
+
+
+def test_inject_nan_without_live_slots_is_noop(tiny_params):
+    assert not inject_nan(_mk_engine(tiny_params))
+
+
+def test_logits_finite_guard():
+    ok = jnp.zeros((2, 61))
+    assert logits_finite(ok)
+    assert not logits_finite(ok.at[1, 3].set(jnp.nan))
+    assert not logits_finite(ok.at[0, 0].set(jnp.inf))
+
+
+# -- chaos schedule -----------------------------------------------------------
+
+
+def test_chaos_event_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        ChaosEvent(1, 0, "meteor")
+
+
+def test_chaos_generate_is_seeded_and_paired():
+    a = ChaosSchedule.generate(seed=42, n_replicas=3, horizon=60)
+    b = ChaosSchedule.generate(seed=42, n_replicas=3, horizon=60)
+    assert a.events == b.events
+    c = ChaosSchedule.generate(seed=43, n_replicas=3, horizon=60)
+    assert a.events != c.events
+    kinds = [e.kind for e in a.events]
+    assert kinds.count("kill") == kinds.count("restart") - kinds.count("nan")
+    assert kinds.count("stall") == kinds.count("unstall")
+    # the last replica is never a fault target: the generated script
+    # alone can never produce a total outage
+    assert all(e.replica < 2 for e in a.events)
+    assert a.pending and not a.fired
+
+
+def test_chaos_apply_fires_in_step_order(tiny_params):
+    cl = _mk_cluster(tiny_params)
+    sched = ChaosSchedule([ChaosEvent(5, 0, "restart"), ChaosEvent(2, 0, "kill")])
+    assert [e.step for e in sched.events] == [2, 5]
+    assert sched.apply(cl, 1) == []
+    fired = sched.apply(cl, 3)
+    assert [e.kind for e in fired] == ["kill"] and cl.healthy == [1]
+    assert sched.pending
+    sched.apply(cl, 5)
+    assert cl.healthy == [0, 1] and not sched.pending
+    assert [ev.kind for _, ev in sched.fired] == ["kill", "restart"]
+
+
+# -- goodput ------------------------------------------------------------------
+
+
+def test_goodput_accounting():
+    def fin(rid, n_tok, dl, late=False, reason="max_new_tokens"):
+        r = _req(rid, deadline_s=dl, max_new=n_tok, plen=3)
+        r.out_tokens = list(range(n_tok))
+        r.t_submit = 100.0
+        r.t_done = 100.0 + (dl * 2 if late and dl else 0.5)
+        r.done = True
+        r.finish_reason = reason
+        return r
+
+    reqs = [
+        fin(0, 4, None),  # no deadline: counts
+        fin(1, 3, 10.0),  # met deadline: counts
+        fin(2, 5, 1.0, late=True),  # missed: wasted work
+        fin(3, 2, None, reason="shed"),  # shed: never goodput
+        fin(4, 2, None, reason="poison"),
+        fin(5, 2, None, reason="rejected"),
+        _req(6, max_new=2, plen=3),  # unfinished
+    ]
+    assert goodput_tokens(reqs) == 7
+    assert goodput_violations(reqs) == 0
+    assert resilience.goodput_tokens([]) == 0

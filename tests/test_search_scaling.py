@@ -226,12 +226,19 @@ def test_compare_gate_thresholds(tmp_path):
                  "cluster": {"min_speedup_multi": 1.5,
                              "require_equal_tokens": True,
                              "min_quant_token_match": 0.8,
-                             "min_quant_capacity_ratio": 2.0}}
+                             "min_quant_capacity_ratio": 2.0},
+                 "chaos": {"min_goodput_frac": 0.6,
+                           "max_goodput_violations": 0,
+                           "require_exact_tokens": True,
+                           "require_outage_survival": True,
+                           "min_quarantined": 2}}
 
     def write(speedup, identical, mono, batch_speedup=3.0,
               batch_identical=True, serving_speedup=1.5,
               serving_identical=True, cluster_speedup=1.8,
-              cluster_equal=True, quant_match=0.9, quant_cap=3.5):
+              cluster_equal=True, quant_match=0.9, quant_cap=3.5,
+              goodput_frac=0.8, goodput_viol=0, chaos_exact=True,
+              outage_ok=True, quarantined=2):
         (tmp_path / "BENCH_codesign_search.json").write_text(json.dumps(
             {"speedup": speedup, "identical_best_design": identical}))
         (tmp_path / "BENCH_budget_scaling.json").write_text(json.dumps(
@@ -249,6 +256,14 @@ def test_compare_gate_thresholds(tmp_path):
              "equal_tokens": cluster_equal,
              "quant_token_match_frac": quant_match,
              "quant_capacity_ratio": quant_cap}))
+        (tmp_path / "BENCH_chaos.json").write_text(json.dumps(
+            {"goodput_frac": goodput_frac,
+             "goodput_violations": goodput_viol,
+             "completed_tokens_exact": chaos_exact,
+             "outage_survived": outage_ok,
+             "outage_tokens_exact": outage_ok,
+             "outage_unrouted": 4,
+             "quarantined": quarantined}))
 
     write(5.0, True, True)
     assert check(str(tmp_path), baselines) == []
@@ -279,5 +294,15 @@ def test_compare_gate_thresholds(tmp_path):
     assert any("token match" in f for f in check(str(tmp_path), baselines))
     write(5.0, True, True, quant_cap=1.2)        # int8-KV capacity loss
     assert any("capacity ratio" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, goodput_frac=0.3)     # goodput collapse under chaos
+    assert any("goodput regressed" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, goodput_viol=1)       # accounting counted late tokens
+    assert any("deadline-violating" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, chaos_exact=False)    # failover no longer token-exact
+    assert any("diverged" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, outage_ok=False)      # total-outage drill failed
+    assert any("total-outage" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, quarantined=1)        # watchdog missed a silent fault
+    assert any("quarantined only" in f for f in check(str(tmp_path), baselines))
     assert any("missing artifact" in f
                for f in check(str(tmp_path / "nope"), baselines))

@@ -2,6 +2,7 @@
 fault-tolerant resume, data determinism."""
 import os
 import tempfile
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -124,3 +125,36 @@ def test_data_determinism_and_straggler_fallback():
     b3 = p1.next_batch(17)
     np.testing.assert_array_equal(b1["tokens"], b3["tokens"])
     assert p1.straggler_events == 1
+
+
+def test_straggler_fallback_with_wedged_worker():
+    """A RUNNING but wedged prefetch worker (sick host, not merely a
+    never-started thread) must not block the training loop: next_batch
+    times out, generates the batch synchronously, and logs exactly one
+    straggler event — and the batch is still the pure (seed, step)
+    function's output."""
+    dcfg = DataConfig(vocab=128, seq_len=16, global_batch=4, seed=11,
+                      straggler_timeout_s=0.05)
+    p = DataPipeline(dcfg)
+    release = threading.Event()
+    real = p._src.batch
+    main = threading.current_thread()
+
+    def wedged(step):
+        # wedge only the prefetch worker; the main thread's synchronous
+        # fallback path must keep working
+        if threading.current_thread() is not main:
+            release.wait()
+        return real(step)
+
+    p._src.batch = wedged
+    p.start(0)
+    try:
+        b = p.next_batch(0)
+        assert p.straggler_events == 1
+        np.testing.assert_array_equal(b["tokens"],
+                                      DataPipeline(dcfg).batch(0)["tokens"])
+        assert p._q.empty()  # the wedged worker really produced nothing
+    finally:
+        release.set()
+        p.stop()
