@@ -33,7 +33,13 @@ nonzero on any regression:
     goodput, every completed token stream must be byte-identical to the
     fault-free run's, the watchdog must have quarantined the silent
     faults (>= min_quarantined), and the total-outage drill must return
-    cleanly and recover token-exactly after restarts.
+    cleanly and recover token-exactly after restarts;
+  * specdec — live in-engine speculative decoding must hold its MEASURED
+    tokens/s speedup over the target-only engine (>= min_speedup) with
+    greedy outputs token-exact, acceptance at the high_tar_pair ceiling
+    (>= min_acceptance — the draft IS the target's prefix by
+    construction, so anything less means the verify window or cache
+    rewind broke), and zero steady-state recompiles in the timed run.
 
 Usage: PYTHONPATH=src python -m benchmarks.compare [--dir DIR]
        [--baseline benchmarks/baselines.json]
@@ -302,6 +308,55 @@ def check(bench_dir: str, baselines: dict) -> list[str]:
             else:
                 print(f"OK chaos: watchdog quarantined {q} >= {min_q} "
                       f"silently faulted replicas")
+
+    path = os.path.join(bench_dir, "BENCH_specdec.json")
+    blob = _load(path)
+    base = baselines.get("specdec", {})
+    if blob is None:
+        failures.append(f"missing artifact: {path}")
+    else:
+        min_speedup = float(base.get("min_speedup", 1.0))
+        speedup = float(blob.get("speedup_specdec_vs_target", 0.0))
+        if speedup < min_speedup:
+            failures.append(
+                f"specdec live speedup regressed: {speedup:.2f}x < "
+                f"baseline {min_speedup:.2f}x")
+        else:
+            print(f"OK specdec: live spec-decode {speedup:.2f}x >= "
+                  f"{min_speedup:.2f}x vs target-only decode")
+        if base.get("require_token_exact", False) and \
+                not blob.get("token_exact", False):
+            failures.append(
+                "specdec: greedy spec-decode output diverged from the "
+                "target-only engine — verify/rewind is no longer exact")
+        min_acc = base.get("min_acceptance")
+        if min_acc is not None:
+            acc = float(blob.get("acceptance_rate", 0.0))
+            if acc < float(min_acc):
+                failures.append(
+                    f"specdec: acceptance {acc:.3f} < baseline "
+                    f"{float(min_acc):.3f} — the high_tar_pair draft is "
+                    f"the target's prefix, so acceptance must be ~1.0")
+            else:
+                print(f"OK specdec: acceptance {acc:.3f} >= "
+                      f"{float(min_acc):.3f} at the shared-prefix ceiling")
+        max_rec = base.get("max_steady_state_recompiles")
+        if max_rec is not None:
+            rec = blob.get("steady_state_recompiles")
+            if rec is None:
+                failures.append(
+                    "specdec: artifact lacks steady_state_recompiles — "
+                    "bench_specdec must record the tracecheck counts")
+            else:
+                worst = max(rec.values())
+                if worst > int(max_rec):
+                    bad = {k: v for k, v in rec.items() if v > int(max_rec)}
+                    failures.append(
+                        f"specdec: steady-state decode now recompiles "
+                        f"({bad}) — baseline allows {max_rec}")
+                else:
+                    print(f"OK specdec: steady-state recompiles <= "
+                          f"{max_rec} across {sorted(rec)}")
     return failures
 
 

@@ -9,6 +9,12 @@ at 2x over non-SD by limiting the draft decode rate (paper protocol).
 
 Paper claim (cost-aware): +24.6% (chatbot) / +58.6% (summarization)
 throughput, -38.6% / -45.6% energy.
+
+These numbers are ANALYTICAL (acceptance-rate algebra over the chiplet
+latency models).  `benchmarks/bench_specdec.py` measures the live
+counterpart — `serving.specdec.SpecDecodeEngine` running draft+target
+co-resident in one engine — and gates the MEASURED tokens/s speedup in
+benchmarks/compare.py.
 """
 from __future__ import annotations
 

@@ -25,6 +25,7 @@ MODULES = [
     "bench_serving",         # compacted sub-batch decode vs PR-4 emulation
     "bench_cluster",         # multi-replica scale-out + int8 KV capacity
     "bench_chaos",           # goodput + token exactness under fault script
+    "bench_specdec",         # live in-engine spec-decode vs target-only
 ]
 
 

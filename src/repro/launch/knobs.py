@@ -86,10 +86,11 @@ KNOBS: tuple[Knob, ...] = (
     ),
     Knob(
         name="MOZART_KV_QUANT",
-        type="bool",
+        type="str",
         default="0",
-        doc="set to 1 to store paged KV pages as int8 with per-head scales "
-        "(~4x slots per HBM byte, token-level parity; paged engines only)",
+        doc="any truthy value stores paged KV pages as int8 with per-head scales "
+        "(~4x slots per HBM byte, token-level parity); the value `dense` also "
+        "covers non-paged plain-transformer engines",
     ),
     Knob(
         name="MOZART_ROUTER",
@@ -146,6 +147,20 @@ KNOBS: tuple[Knob, ...] = (
         default="1",
         doc="set to 0 to disable the jitted NaN/Inf guard on decode logits "
         "(the watchdog quarantines a replica the step it emits non-finite logits)",
+    ),
+    Knob(
+        name="MOZART_SPEC_K",
+        type="int",
+        default="4",
+        doc="speculative-decode draft window: tokens the draft model proposes "
+        "per verify step (`serve --scenario specdec` and bench_specdec)",
+    ),
+    Knob(
+        name="MOZART_SCENARIO",
+        type="str",
+        default="",
+        doc="serving scenario `serve` runs when `--scenario` is not given: "
+        "empty = plain engine, `specdec` = in-engine speculative decoding",
     ),
     Knob(
         name="MOZART_CHAOS_SEED",

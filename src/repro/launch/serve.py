@@ -46,6 +46,7 @@ import numpy as np
 
 from repro import configs
 from repro.core.policy import ExecutionPolicy
+from repro.launch import knobs
 from repro.models import api, transformer
 from repro.models.config import ModelConfig
 from repro.serving.engine import Request, ServingEngine
@@ -67,25 +68,48 @@ def apply_policy(pol: ExecutionPolicy, mcfg: ModelConfig,
     flags = pol.fusion_flags()
 
     applied = []
+    # the fused kernel hooks live in the transformer family's
+    # attention/mlp_block/apply_norm dispatch; every other combination
+    # logs the ACTUAL unsupported reason instead of claiming application
+    # (the engine serves all families now, so "engine is transformer-
+    # only" is no longer the gate — the kernel dispatch is)
     if flags["flash_attention"]:
-        mcfg = mcfg.replace(attn_impl="flash")
-        applied.append("flash_attention->attn_impl=flash")
-    # the fused MLP/norm hooks live in the transformer family's
-    # mlp_block/apply_norm dispatch; other families (and layernorm
-    # archs) log an explicit no-op instead of claiming application
+        if mcfg.family == "transformer":
+            mcfg = mcfg.replace(attn_impl="flash")
+            applied.append("flash_attention->attn_impl=flash")
+        elif mcfg.family == "rglru":
+            applied.append("flash_attention(no hook: rglru's interleaved "
+                           "attention decodes through its ring-buffer "
+                           "window path)")
+        elif mcfg.family == "whisper":
+            applied.append("flash_attention(no hook: whisper decoder "
+                           "blocks interleave cross-attention over the "
+                           "encoder window)")
+        else:
+            applied.append(f"flash_attention(no hook: {mcfg.family} has "
+                           f"no softmax-attention operator)")
     if flags["fused_mlp"]:
         if mcfg.family == "transformer":
             mcfg = mcfg.replace(mlp_impl="fused")
             applied.append("fused_mlp->mlp_impl=fused")
+        elif mcfg.family == "whisper":
+            applied.append("fused_mlp(no hook: whisper cross-attn blocks "
+                           "interleave the MLP with encoder reads)")
         else:
-            applied.append(f"fused_mlp(no hook: family={mcfg.family})")
+            applied.append(f"fused_mlp(no hook: {mcfg.family} uses gated "
+                           f"recurrent channel mixing, not the plain MLP "
+                           f"the fused kernel covers)")
     if flags["fused_norm"]:
         if mcfg.family == "transformer" and mcfg.norm == "rmsnorm":
             mcfg = mcfg.replace(norm_impl="fused")
             applied.append("fused_norm->norm_impl=fused")
+        elif mcfg.family == "transformer":
+            applied.append(f"fused_norm(no hook: norm={mcfg.norm}; the "
+                           f"fused kernel implements rmsnorm only)")
         else:
-            applied.append(f"fused_norm(no hook: family={mcfg.family}, "
-                           f"norm={mcfg.norm})")
+            applied.append(f"fused_norm(no hook: {mcfg.family}'s norm "
+                           f"dispatch has no fused path, norm="
+                           f"{mcfg.norm})")
     lines.append(f"[serve] policy network={pol.network} "
                  f"fusion flags: flash_attention={flags['flash_attention']} "
                  f"fused_mlp={flags['fused_mlp']} "
@@ -102,6 +126,13 @@ def apply_policy(pol: ExecutionPolicy, mcfg: ModelConfig,
     lines.append(f"[serve] policy microbatch: max_batch {max_batch}->"
                  f"{eng_batch} (batch_sensitive_batch={sens}), "
                  f"decode_batch={dec_batch} (batch_agnostic_batch={agn})")
+    if mcfg.family != "transformer":
+        # recurrent / encoder-decoder families decode through the
+        # ALWAYS-gathered DecodeState sub-batch, so the policy's
+        # batch-agnostic split maps to the gathered lane width directly
+        lines.append(f"[serve] policy microbatch: {mcfg.family} decodes "
+                     f"gathered at width {dec_batch} (recurrent state is "
+                     f"irreversible; no full-width emulation)")
 
     tp = pol.tp_degree
     if tp > 1 and n_devices % tp == 0 and n_devices >= tp:
@@ -127,8 +158,17 @@ def main() -> None:
     p.add_argument("--max-batch", type=int, default=4)
     p.add_argument("--max-len", type=int, default=128)
     p.add_argument("--specdec", action="store_true",
-                   help="speculative decoding demo (draft = thinner config)")
-    p.add_argument("--k", type=int, default=5)
+                   help="speculative decoding demo (draft = thinner config; "
+                        "uncached reference loop — see --scenario specdec "
+                        "for the live in-engine path)")
+    p.add_argument("--k", type=int, default=None,
+                   help="spec-decode draft window (default: the "
+                        "MOZART_SPEC_K knob)")
+    p.add_argument("--scenario", default=None, choices=("", "specdec"),
+                   help="serving scenario (default: the MOZART_SCENARIO "
+                        "knob): `specdec` serves through the live "
+                        "SpecDecodeEngine (SpecDecodeScenario; draft = "
+                        "shared-trunk layer truncation)")
     p.add_argument("--policy", default=None, metavar="DEPLOYMENT_JSON",
                    help="mozart deployment artifact (or bare policy JSON) "
                         "to apply: fusion flags, microbatches, TP")
@@ -180,6 +220,8 @@ def main() -> None:
     params = api.init_params(mcfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
+    spec_k = args.k if args.k is not None else knobs.get_int("MOZART_SPEC_K")
+
     if args.specdec:
         if mcfg.family != "transformer":
             raise SystemExit("specdec demo targets transformer archs")
@@ -191,7 +233,7 @@ def main() -> None:
         df = jax.jit(lambda t: transformer.forward(dcfg, dparams, t))  # mzc: ignore[MZC013]
         prompt = rng.integers(0, mcfg.vocab, size=12).astype(np.int32)
         t0 = time.time()
-        out, stats = spec_decode_greedy(tf, df, prompt, k=args.k,
+        out, stats = spec_decode_greedy(tf, df, prompt, k=spec_k,
                                         max_new_tokens=args.max_new)
         dt = time.time() - t0
         print(f"[serve] specdec: {len(out)} tokens in {dt:.2f}s; "
@@ -199,7 +241,47 @@ def main() -> None:
               f"tokens/iter={stats.tokens_per_iteration:.2f}")
         return
 
-    from repro.launch import knobs
+    scenario = args.scenario if args.scenario is not None \
+        else knobs.get_str("MOZART_SCENARIO")
+    if scenario == "specdec":
+        from repro.core.scenarios import get_scenario
+        from repro.serving.specdec import (SpecDecodeEngine,
+                                           shared_trunk_draft)
+        if mcfg.family != "transformer":
+            raise SystemExit("--scenario specdec needs a transformer arch")
+        sc = get_scenario("spec_decode")
+        try:
+            dcfg, dparams = shared_trunk_draft(
+                mcfg, params, max(1, mcfg.n_layers // 4))
+            draft_src = "shared-trunk"
+        except ValueError:
+            # scanned/multi-segment archs: fall back to a fresh-init
+            # thin draft (acceptance will be whatever it is)
+            dcfg = mcfg.replace(n_layers=max(1, mcfg.n_layers // 4))
+            dparams = api.init_params(dcfg, jax.random.PRNGKey(1))
+            draft_src = "fresh-init"
+        eng = SpecDecodeEngine(mcfg, params, dcfg, dparams, k=spec_k,
+                               max_len=args.max_len, **eng_kwargs)
+        print(f"[serve] scenario={sc.name} (roles={sc.roles}): live "
+              f"spec-decode, k={spec_k}, draft={draft_src} "
+              f"{dcfg.n_layers}/{mcfg.n_layers} layers")
+        for i in range(args.requests):
+            plen = int(rng.integers(4, 12))
+            eng.submit(Request(
+                rid=i, prompt=rng.integers(0, mcfg.vocab,
+                                           size=plen).astype(np.int32),
+                max_new_tokens=args.max_new))
+        t0 = time.time()
+        eng.run()
+        dt = time.time() - t0
+        st = eng.spec_stats
+        print(f"[serve] specdec-live: {eng.stats['tokens_out']} tokens in "
+              f"{dt:.2f}s ({eng.stats['tokens_out'] / max(dt, 1e-9):.1f} "
+              f"tok/s); accept={st.acceptance_rate:.2f} "
+              f"tokens/iter={st.tokens_per_iteration:.2f} "
+              f"({eng.stats['decode_steps']} verify steps)")
+        return
+
     n_replicas = args.replicas or knobs.get_int("MOZART_REPLICAS")
     if n_replicas > 1:
         from repro.serving.cluster import LoadGenerator, ServingCluster

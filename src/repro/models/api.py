@@ -83,5 +83,14 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
     return family_module(cfg).decode_step(cfg, params, tokens, cache)
 
 
+def decode_window(cfg: ModelConfig, params: Params, tokens, cache):
+    """Verify a (B, W) token window in one cached forward (spec-decode).
+    Plain-attention transformers only; see `transformer.decode_window`."""
+    if cfg.family != "transformer":
+        raise NotImplementedError(
+            f"decode_window is transformer-only, not {cfg.family}")
+    return transformer.decode_window(cfg, params, tokens, cache)
+
+
 def param_count(params: Params) -> int:
     return sum(x.size for x in jax.tree_util.tree_leaves(params))

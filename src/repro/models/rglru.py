@@ -223,9 +223,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 
 
 def _decode_attn(cfg: ModelConfig, p: Params, x, lc, index):
+    """One cached-attention step.  `index` is a per-slot (B,) position
+    vector so engine-side slot rotation/compaction can hand each lane an
+    independent ring position (uniform vectors are bit-identical to the
+    historical scalar path)."""
     bsz = x.shape[0]
     dt = cfg.jdtype
-    pos1 = jnp.full((bsz, 1), index, jnp.int32)
+    pos1 = index[:, None]
     q = (x @ p["wq"].astype(dt)).reshape(bsz, 1, cfg.n_heads, cfg.hd)
     k = (x @ p["wk"].astype(dt)).reshape(bsz, 1, cfg.kv_heads, cfg.hd)
     v = (x @ p["wv"].astype(dt)).reshape(bsz, 1, cfg.kv_heads, cfg.hd)
@@ -234,19 +238,19 @@ def _decode_attn(cfg: ModelConfig, p: Params, x, lc, index):
     K, V = lc["k"], lc["v"]
     clen = K.shape[1]
     slot = index % clen
-    K = jax.lax.dynamic_update_slice(K, k.astype(K.dtype), (0, slot, 0, 0))
-    V = jax.lax.dynamic_update_slice(V, v.astype(V.dtype), (0, slot, 0, 0))
+    K = K.at[jnp.arange(bsz), slot].set(k[:, 0].astype(K.dtype))
+    V = V.at[jnp.arange(bsz), slot].set(v[:, 0].astype(V.dtype))
     n_rep = cfg.n_heads // cfg.kv_heads
     Kr = jnp.repeat(K.astype(dt), n_rep, 2) if n_rep > 1 else K.astype(dt)
     Vr = jnp.repeat(V.astype(dt), n_rep, 2) if n_rep > 1 else V.astype(dt)
     sc = jnp.einsum("bqhd,bchd->bhqc", q, Kr).astype(jnp.float32) \
         / math.sqrt(cfg.hd)
     j = jnp.arange(clen)
-    kpos = index - ((index - j) % clen)
-    mask = (kpos >= 0) & (kpos <= index)
+    kpos = pos1 - ((pos1 - j[None]) % clen)        # (B, clen)
+    mask = (kpos >= 0) & (kpos <= pos1)
     if cfg.window:
-        mask &= kpos > index - cfg.window
-    sc = jnp.where(mask[None, None, None], sc, -1e30)
+        mask &= kpos > pos1 - cfg.window
+    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
     pr = jax.nn.softmax(sc, -1).astype(dt)
     o = jnp.einsum("bhqc,bchd->bqhd", pr, Vr)
     out = o.reshape(bsz, 1, cfg.q_dim) @ p["wo"].astype(dt)
@@ -254,7 +258,9 @@ def _decode_attn(cfg: ModelConfig, p: Params, x, lc, index):
 
 
 def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
-    index = cache["index"]
+    raw_index = cache["index"]
+    index = (raw_index if raw_index.ndim == 1
+             else jnp.full((tokens.shape[0],), raw_index, jnp.int32))
     x = jnp.take(params["embed"].astype(cfg.jdtype), tokens, axis=0)
     x = x * math.sqrt(cfg.d_model)
     new_layers = []
@@ -269,7 +275,7 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
         new_layers.append(nc)
     x = apply_norm(cfg, params["final_norm"], x)
     logits = x @ params["embed"].astype(cfg.jdtype).T
-    return logits, {"layers": new_layers, "index": index + 1}
+    return logits, {"layers": new_layers, "index": raw_index + 1}
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len: int):

@@ -824,6 +824,91 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
     return logits, {"segments": new_segs, "index": raw_index + 1}
 
 
+def _window_attn(cfg: ModelConfig, p: Params, x, seg_cache, pos):
+    """W-token cached attention (spec-decode verify). x: (B, W, d);
+    pos: (B, W) absolute positions.  Plain (non-MLA, non-ring) path:
+    position p writes cache slot p directly and attends causally to
+    every slot <= its own position."""
+    bsz, w = x.shape[0], x.shape[1]
+    dt = cfg.jdtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), \
+            v + p["bv"].astype(dt)
+    q = q.reshape(bsz, w, cfg.n_heads, cfg.hd)
+    k = k.reshape(bsz, w, cfg.kv_heads, cfg.hd)
+    v = v.reshape(bsz, w, cfg.kv_heads, cfg.hd)
+    q, k = _rope_qk(cfg, q, k, pos)
+    K, V = seg_cache["k"], seg_cache["v"]           # (B, C, kvh, hd)
+    rows = jnp.arange(bsz)[:, None]
+    K = K.at[rows, pos].set(k.astype(K.dtype))
+    V = V.at[rows, pos].set(v.astype(V.dtype))
+    n_rep = cfg.n_heads // cfg.kv_heads
+    Kr = jnp.repeat(K.astype(dt), n_rep, axis=2) if n_rep > 1 \
+        else K.astype(dt)
+    Vr = jnp.repeat(V.astype(dt), n_rep, axis=2) if n_rep > 1 \
+        else V.astype(dt)
+    scores = jnp.einsum("bqhd,bchd->bhqc", q, Kr) \
+        .astype(jnp.float32) / math.sqrt(cfg.hd)
+    mask = jnp.arange(K.shape[1])[None, None, :] <= pos[:, :, None]
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, -1).astype(dt)
+    o = jnp.einsum("bhqc,bchd->bqhd", probs, Vr)
+    out = o.reshape(bsz, w, cfg.q_dim) @ p["wo"].astype(dt)
+    return out, {"k": K, "v": V}
+
+
+def window_supported(cfg: ModelConfig) -> bool:
+    """Configs `decode_window` handles: plain linear-cache attention."""
+    return (cfg.family == "transformer" and not cfg.use_mla
+            and not cfg.window)
+
+
+def decode_window(cfg: ModelConfig, params: Params, tokens, cache):
+    """Verify W speculated tokens in ONE cached forward.
+
+    tokens: (B, W) int32 at positions index..index+W-1; their KV is
+    written into the cache and logits for every window position come
+    back as (B, W, vocab).  The caller rewinds over-written positions
+    simply by resetting `cache["index"]` — slots past the index are
+    masked out of every later attention, so stale KV is harmless.
+    """
+    if not window_supported(cfg):
+        raise NotImplementedError(
+            "decode_window: plain-attention transformer only "
+            f"(family={cfg.family}, mla={cfg.use_mla}, "
+            f"window={cfg.window})")
+    raw_index = jnp.asarray(cache["index"])
+    bsz, w = tokens.shape
+    index = raw_index if raw_index.ndim == 1 \
+        else jnp.full((bsz,), raw_index, jnp.int32)
+    pos = index[:, None] + jnp.arange(w, dtype=jnp.int32)[None]
+    x = embed_tokens(cfg, params, tokens)
+    new_segs = []
+    for seg, seg_cache in zip(params["segments"], cache["segments"]):
+        kind = segment_kind(seg)
+        sp = segment_params(seg)
+        count = jax.tree_util.tree_leaves(sp)[0].shape[0]
+        ncs = []
+        for i in range(count):
+            lp = jax.tree.map(lambda a: a[i], sp)
+            lc = jax.tree.map(lambda a: a[i], seg_cache)
+            a, nci = _window_attn(cfg, lp["attn"],
+                                  apply_norm(cfg, lp["norm1"], x), lc, pos)
+            x, h = apply_norm_residual(cfg, lp["norm2"], x, a)
+            if kind == "moe":
+                x = x + moe_block(cfg, lp["moe"], h)
+            else:
+                x = x + mlp_block(cfg, lp["mlp"], h)
+            ncs.append(nci)
+        new_segs.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ncs))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x)
+    return logits, {"segments": new_segs, "index": raw_index + w}
+
+
 def prefill(cfg: ModelConfig, params: Params, tokens, max_len: int, *,
             embeds=None):
     """Run the prompt, fill the cache, return (last_logits, cache)."""

@@ -193,14 +193,21 @@ def prefill(cfg: ModelConfig, params: Params, frames, tokens,
 
 
 def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
-    """One decoder token against self-cache + precomputed cross KV."""
+    """One decoder token against self-cache + precomputed cross KV.
+
+    `cache["index"]` may be a scalar or a per-slot (B,) vector — the
+    vector form lets the serving engine rotate/compact decoder slots
+    independently (uniform vectors match the scalar path bit-for-bit).
+    """
     dt = cfg.jdtype
-    index = cache["index"]
+    raw_index = cache["index"]
     b = tokens.shape[0]
+    index = (raw_index if raw_index.ndim == 1
+             else jnp.full((b,), raw_index, jnp.int32))
     h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
-    pos_emb = jax.lax.dynamic_slice_in_dim(params["dec_pos"], index, 1, 0)
+    pos_emb = jnp.take(params["dec_pos"], index, axis=0)       # (B, d)
     x = jnp.take(params["embed"].astype(dt), tokens, axis=0) + \
-        pos_emb.astype(dt)[None, 0]
+        pos_emb.astype(dt)[:, None]
     new_layers = []
     for p, lc in zip(params["dec_layers"], cache["layers"]):
         hn = layernorm(x, p["ln1"]["scale"], p["ln1"]["bias"])
@@ -209,14 +216,14 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
         k = (hn @ p["self_attn"]["wk"].astype(dt)).reshape(b, 1, h, hd)
         v = (hn @ p["self_attn"]["wv"].astype(dt)
              + p["self_attn"]["bv"].astype(dt)).reshape(b, 1, h, hd)
-        K = jax.lax.dynamic_update_slice(lc["k"], k.astype(lc["k"].dtype),
-                                         (0, index, 0, 0))
-        V = jax.lax.dynamic_update_slice(lc["v"], v.astype(lc["v"].dtype),
-                                         (0, index, 0, 0))
+        K = lc["k"].at[jnp.arange(b), index].set(
+            k[:, 0].astype(lc["k"].dtype))
+        V = lc["v"].at[jnp.arange(b), index].set(
+            v[:, 0].astype(lc["v"].dtype))
         sc = jnp.einsum("bqhd,bchd->bhqc", q, K.astype(dt)) \
             .astype(jnp.float32) / math.sqrt(hd)
-        mask = jnp.arange(K.shape[1]) <= index
-        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        mask = jnp.arange(K.shape[1])[None] <= index[:, None]  # (B, C)
+        sc = jnp.where(mask[:, None, None, :], sc, -1e30)
         pr = jax.nn.softmax(sc, -1).astype(dt)
         o = jnp.einsum("bhqc,bchd->bqhd", pr, V.astype(dt))
         a = o.reshape(b, 1, cfg.d_model) @ p["self_attn"]["wo"].astype(dt) \
@@ -237,4 +244,4 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
         new_layers.append({"k": K, "v": V, "ck": lc["ck"], "cv": lc["cv"]})
     x = layernorm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"])
     logits = x @ params["embed"].astype(dt).T
-    return logits, {"layers": new_layers, "index": index + 1}
+    return logits, {"layers": new_layers, "index": raw_index + 1}

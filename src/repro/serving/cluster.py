@@ -16,6 +16,16 @@ and a `Router` spreads requests across them:
 * ``shortest_queue``  — join-shortest-queue over queued + in-flight
   requests.
 
+MIXED-FAMILY FLEETS.  `replica_models` gives each replica its own
+(config, params) pair — e.g. transformer chat replicas next to rglru
+long-context ones next to whisper transcription ones, the heterogeneous
+workload mix Mozart composes chiplets for.  A request tagged with
+`Request.model` routes only to replicas serving that model name
+(untagged requests route anywhere); a tagged request whose replica is
+down parks until that replica restarts.  Everything else — failover,
+watchdog, chaos, metrics — is family-agnostic because the engines'
+`DecodeState` layer is.
+
 Failure injection: `kill_replica(i)` marks a replica unhealthy and
 re-routes everything it held — queued requests as-is, in-flight slot
 requests through the engine's resume path (re-prefill of
@@ -278,9 +288,18 @@ class ServingCluster:
         mesh=None,
         retry_budget: int | None = None,
         watchdog: resilience.Watchdog | None = None,
+        replica_models: list[tuple[ModelConfig, object]] | None = None,
         **engine_kwargs,
     ):
-        n = n_replicas or knobs.get_int("MOZART_REPLICAS")
+        if replica_models is not None:
+            n = n_replicas or len(replica_models)
+            if len(replica_models) != n:
+                raise ValueError(
+                    f"replica_models has {len(replica_models)} entries "
+                    f"for {n} replicas"
+                )
+        else:
+            n = n_replicas or knobs.get_int("MOZART_REPLICAS")
         if n < 1:
             raise ValueError(f"need at least one replica, got {n}")
         if mesh is not None:
@@ -290,14 +309,22 @@ class ServingCluster:
         else:
             meshes = [None] * n
         # restart_replica rebuilds a dead replica's engine (fresh page
-        # pool, clean health flags) from exactly these construction args
+        # pool, clean health flags) from exactly these construction args.
+        # A MIXED-FAMILY fleet passes `replica_models`: per-replica
+        # (config, params) pairs — requests tagged with `Request.model`
+        # route only to replicas serving that model name.
         self._mcfg = mcfg
         self._params = params
+        self._replica_models = (
+            list(replica_models)
+            if replica_models is not None
+            else [(mcfg, params)] * n
+        )
         self._meshes = meshes
         self._engine_kwargs = dict(engine_kwargs)
         self.replicas = [
-            ServingEngine(mcfg, params, mesh=meshes[i], **engine_kwargs)
-            for i in range(n)
+            ServingEngine(c, p, mesh=meshes[i], **engine_kwargs)
+            for i, (c, p) in enumerate(self._replica_models)
         ]
         self.router = router if isinstance(router, Router) else Router(router)
         self.healthy: list[int] = list(range(n))
@@ -330,20 +357,30 @@ class ServingCluster:
 
     # -- request lifecycle ---------------------------------------------------
 
+    def _eligible(self, req: Request, candidates: list[int]) -> list[int]:
+        """Replicas allowed to serve `req`: all of `candidates` for an
+        untagged request, else only those whose engine serves the tagged
+        model name (mixed-family fleets)."""
+        if req.model is None:
+            return candidates
+        return [i for i in candidates if self.replicas[i].mcfg.name == req.model]
+
     def submit(self, req: Request) -> int:
         """Route one request to a healthy replica; returns its index.
-        With zero healthy replicas the request is PARKED (-1) until a
-        restart; with every healthy queue full it is SHED (-1)."""
+        With zero healthy (and model-eligible) replicas the request is
+        PARKED (-1) until a restart; with every healthy queue full it is
+        SHED (-1)."""
         if req.t_submit is None:
             req.t_submit = time.monotonic()
         self.requests.append(req)
-        if not self.healthy:
+        eligible = self._eligible(req, self.healthy)
+        if not eligible:
             self.parked.append(req)
             self.stats["unrouted_total"] += 1
             return -1
         # backpressure: bounded queues take a replica out of the routable
         # set; a fleet with every queue full sheds instead of buffering
-        routable = [i for i in self.healthy if not self.replicas[i].queue_full]
+        routable = [i for i in eligible if not self.replicas[i].queue_full]
         if not routable:
             req.done = True
             req.finish_reason = "shed"
@@ -368,11 +405,12 @@ class ServingCluster:
             req.t_done = time.monotonic()
             self.stats["poisoned"] += 1
             return
-        if not self.healthy:
+        eligible = self._eligible(req, self.healthy)
+        if not eligible:
             self.parked.append(req)
             self.stats["unrouted_total"] += 1
             return
-        j = self.router.pick(self.replicas, self.healthy)
+        j = self.router.pick(self.replicas, eligible)
         self.assignment[req.rid] = j
         self.replicas[j].queue.insert(0, req)
         self.stats["requeued"] += 1
@@ -392,8 +430,7 @@ class ServingCluster:
             if req is None:
                 continue
             eng.slots[b] = None
-            if eng.paged:
-                eng.pool.release(b)
+            eng.state.release(b)
             stranded.append(req)
         stranded.extend(eng.queue)
         eng.queue.clear()
@@ -417,8 +454,9 @@ class ServingCluster:
         old = self.replicas[i]
         for key in self._retired:
             self._retired[key] += old.stats[key]
+        rcfg, rparams = self._replica_models[i]
         self.replicas[i] = ServingEngine(
-            self._mcfg, self._params, mesh=self._meshes[i], **self._engine_kwargs
+            rcfg, rparams, mesh=self._meshes[i], **self._engine_kwargs
         )
         self.healthy.append(i)
         self.healthy.sort()
@@ -432,7 +470,13 @@ class ServingCluster:
         for req in reversed(parked):
             if req.done:
                 continue
-            j = self.router.pick(self.replicas, self.healthy)
+            eligible = self._eligible(req, self.healthy)
+            if not eligible:
+                # tagged for a model whose replica is still down: keep
+                # parking until ITS replica restarts
+                self.parked.insert(0, req)
+                continue
+            j = self.router.pick(self.replicas, eligible)
             self.assignment[req.rid] = j
             self.replicas[j].queue.insert(0, req)
             self.stats["requeued"] += 1

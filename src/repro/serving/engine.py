@@ -9,6 +9,20 @@ Mozart `ExecutionPolicy` (batch-agnostic attention wants small per-op
 batch with high TP; batch-sensitive projections want the opposite — the
 engine's `decode_batch` honors the policy's compromise).
 
+MODEL STATE.  The engine is family-agnostic: per-slot model state lives
+behind a `serving.state.DecodeState`, so the SAME admission / EDF
+shedding / rotation / preemption / failover machinery serves every
+family in `configs/`:
+
+* transformer — `PagedKVState` (block-paged pool, default) or
+  `DenseKVState` (dense rectangles, optionally int8 via
+  `MOZART_KV_QUANT=dense`);
+* rglru / rwkv6 — `RecurrentState` (conv+hidden / wkv state with
+  per-slot vector-indexed gather/scatter; decode is always the gathered
+  sub-batch form because recurrent state cannot be rewound);
+* whisper — `CrossAttnState` (encoder outputs + decoder self KV; the
+  request's `frames` embeddings are encoded at admission).
+
 KV STORAGE.  By default (`MOZART_PAGED_KV=1`, transformer family without
 SWA/MoE) the KV cache is BLOCK-PAGED: fixed-size pages from a shared
 pool, owned per-slot through page tables (`serving.paged.PagePool`),
@@ -21,10 +35,12 @@ Decode gathers the active slots' pages into the dense layout
 against the dense cache.  When the free list runs dry the engine
 preempts the youngest-admitted slot (requeued at the queue front and
 later resumed by re-prefilling its tokens).  `paged=False` (or
-`MOZART_PAGED_KV=0`) restores the dense rectangles.  `kv_quant=True`
-(`MOZART_KV_QUANT=1`, paged only) stores pages int8 with per-head scales
-(`serving.quant`): the gather dequantizes, the scatter re-quantizes, and
-the same HBM holds ~4x the slots at token-level (not bit-level) parity.
+`MOZART_PAGED_KV=0`) restores the dense rectangles.  `MOZART_KV_QUANT`
+stores KV int8 with per-head scales (`serving.quant`): any truthy value
+quantizes the paged pool (gather dequantizes, scatter re-quantizes, the
+same HBM holds ~4x the slots at token-level — not bit-level — parity);
+the value `dense` additionally covers non-paged transformer engines
+(per-(layer, slot, head) scales over the dense rectangles).
 
 When `decode_batch < max_batch` the engine runs a COMPACTED sub-batch
 decode: the active slots' cache slices are gathered into a dense
@@ -34,7 +50,8 @@ batch split saves real per-step FLOPs, not just schedule steps.  Slots
 rotate in slot-id order (the cursor is keyed to slot ids, not positions,
 so admission/finish churn cannot starve or double-serve a slot).  Set
 `compact=False` (or `MOZART_COMPACT_DECODE=0`) for the legacy full-width
-round-robin emulation, kept for benchmarking against the PR-4 behavior.
+round-robin emulation, kept for benchmarking against the PR-4 behavior
+(transformer only — recurrent/cross-attn states are always gathered).
 
 A `mesh` with a >1 "model" axis makes the policy's TP degree real:
 params and KV cache (dense slabs or page pools) are placed with
@@ -69,20 +86,24 @@ replica and the requeue path recovers its requests token-exactly.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.launch import knobs
-from repro.models import api
 from repro.models.config import ModelConfig
 from . import paged as paged_kv
 from . import resilience
+from . import state as state_mod
 from .sampling import sample
+
+# re-exports: tests and downstream modules address these through the
+# engine module (and monkeypatch _rewind_inactive by this name)
+from .state import (_GATHER, _SCATTER, _decode_fn, _gather_slots,  # noqa: F401
+                    _prefill_fn, _rewind_inactive, _scatter_slots,
+                    _tree_set_slot)
 
 Params = Any
 
@@ -96,6 +117,12 @@ class Request:
     # SLO deadline in seconds from t_submit; None = no deadline.  The
     # engine sheds the request at admission when it cannot be met.
     deadline_s: float | None = None
+    # whisper: precomputed encoder frame embeddings (F, d_model); other
+    # families ignore it.  None encodes a zero (silence) window.
+    frames: np.ndarray | None = None
+    # cluster routing tag: only replicas whose engine serves this model
+    # name may run the request (None = any replica)
+    model: str | None = None
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     finish_reason: str | None = None
@@ -107,72 +134,27 @@ class Request:
     requeues: int = 0             # failovers survived (cluster retry budget)
 
 
-def _tree_set_slot(batched, single, b: int):
-    """Write `single` (batch dim 1 or absent on index leaves) into slot b
-    of `batched` along the batch dimension."""
-    def leaf(dst, src):
-        if dst.ndim == 0:
-            return src if src.ndim == 0 else src.reshape(())
-        # find the batch dim: first dim where dst differs from src by
-        # factor max_batch vs 1 — conventionally dims named (B,...) or
-        # (L,B,...) (stacked segments).
-        if dst.ndim == src.ndim:
-            for axis in range(dst.ndim):
-                if src.shape[axis] == 1 and dst.shape[axis] > 1:
-                    idx = [slice(None)] * dst.ndim
-                    idx[axis] = slice(b, b + 1)
-                    return dst.at[tuple(idx)].set(src.astype(dst.dtype))
-        return dst
-    return jax.tree.map(leaf, batched, single)
+def _rewind_hook(index, inactive):
+    """Late-bound module-global lookup so tests monkeypatching
+    `engine._rewind_inactive` observe the dense full-width rewind."""
+    return _rewind_inactive(index, inactive)
 
 
-def _gather_slots(cache, sel):
-    """Compact the cache slices of slots `sel` into a dense sub-cache.
-    Segment leaves are (L, B, C, ...) — batch on axis 1; "index" is (B,)."""
-    return {
-        "segments": jax.tree.map(lambda a: jnp.take(a, sel, axis=1),
-                                 cache["segments"]),
-        "index": jnp.take(cache["index"], sel, axis=0),
-    }
-
-
-def _scatter_slots(cache, sub, sel):
-    """Write an advanced sub-cache back into slots `sel`.  Padding lanes
-    duplicate a real slot with identical content, so repeated indices in
-    `sel` write identical values (scatter order is irrelevant)."""
-    segs = jax.tree.map(
-        lambda full, part: full.at[:, sel].set(part.astype(full.dtype)),
-        cache["segments"], sub["segments"])
-    idx = cache["index"].at[sel].set(sub["index"])
-    return {"segments": segs, "index": idx}
-
-
-def _rewind_inactive(index, inactive: list[int]):
-    """ONE batched scatter-add rewinding every slot that did not advance
-    this step (the PR-4 code dispatched a separate `.at[b].add(-1)` per
-    inactive slot)."""
-    return index.at[jnp.asarray(inactive, jnp.int32)].add(-1)
-
-
-_GATHER = jax.jit(_gather_slots)
-# the engine drops the old cache the moment the scatter returns, so the
-# full-size buffers are donated — on accelerators the scatter updates in
-# place instead of allocating a second (L, max_batch, clen, ...) cache
-_SCATTER = jax.jit(_scatter_slots, donate_argnums=(0,))
-
-
-@functools.lru_cache(maxsize=8)
-def _decode_fn(mcfg: ModelConfig):
-    """Shared per-config jitted decode (engines with the same config —
-    e.g. benchmark variants — reuse one trace cache).  Bounded: a config
-    sweep evicts old executables instead of retaining them forever."""
-    return jax.jit(lambda p, t, c: api.decode_step(mcfg, p, t, c))
-
-
-@functools.lru_cache(maxsize=8)
-def _prefill_fn(mcfg: ModelConfig, max_len: int):
-    return jax.jit(
-        lambda p, toks: api.prefill(mcfg, p, {"tokens": toks}, max_len))
+def _kv_quant_mode(kv_quant, paged: bool, mcfg: ModelConfig) -> str:
+    """Resolve the engine's KV-quant mode: "paged" (int8 page pool),
+    "dense" (int8 dense rectangles), or "" (off).  Any truthy value
+    quantizes a paged engine; the explicit value `dense` additionally
+    covers dense transformer engines (rings excluded: the stale-position
+    zeroing assumes slot j holds position j)."""
+    raw = knobs.get_str("MOZART_KV_QUANT") if kv_quant is None else kv_quant
+    mode = str(raw).strip().lower()
+    if mode in ("0", "", "false", "no", "off"):
+        return ""
+    if paged:
+        return "paged"
+    if mode == "dense" and mcfg.family == "transformer" and not mcfg.window:
+        return "dense"
+    return ""
 
 
 class ServingEngine:
@@ -182,7 +164,8 @@ class ServingEngine:
                  compact: bool | None = None, mesh=None,
                  paged: bool | None = None, page_size: int | None = None,
                  num_pages: int | None = None,
-                 kv_quant: bool | None = None,
+                 kv_quant: bool | str | None = None,
+                 enc_len: int | None = None,
                  queue_bound: int | None = None,
                  guard_nan: bool | None = None,
                  shed_deadlines: bool | None = None):
@@ -197,23 +180,24 @@ class ServingEngine:
         self.decode_batch = decode_batch or max_batch
         if compact is None:
             compact = knobs.get_bool("MOZART_COMPACT_DECODE")
-        # the gather/scatter helpers know the transformer cache layout
-        # ({"segments": [(L, B, C, ...)], "index": (B,)}); other families
-        # ({"layers": [(B, ...)]}) fall back to the schedule emulation
-        self.compact = compact and mcfg.family == "transformer"
+        # transformer engines honor the knob; recurrent/cross-attn state
+        # cannot be rewound, so their decode is ALWAYS the gathered
+        # sub-batch form (see serving.state._LayersState)
+        self.compact = compact if mcfg.family == "transformer" else True
         if paged is None:
             paged = knobs.get_bool("MOZART_PAGED_KV")
         # paged + bucketed serving is exact only for the plain transformer
         # cache (no SWA ring, no MoE capacity router) — see paged_supported
         self.paged = paged and paged_kv.paged_supported(mcfg)
-        if kv_quant is None:
-            kv_quant = knobs.get_bool("MOZART_KV_QUANT")
-        # int8 KV rides the paged gather/scatter round-trip, so it is
-        # paged-only: the dense rectangles silently stay f32
-        self.kv_quant = bool(kv_quant) and self.paged
+        quant_mode = _kv_quant_mode(kv_quant, self.paged, mcfg)
+        self.kv_quant = quant_mode == "paged"
+        self.kv_quant_dense = quant_mode == "dense"
         self._next_slot = 0           # rotation cursor: a SLOT ID
         self.eos_id = eos_id
         self._admit_counter = 0
+        # KV headroom one decode step needs; spec-decode engines write
+        # k+1 positions per iteration and raise this accordingly
+        self._headroom = 1
         # -- resilience knobs: bounded queue, deadline shedding, NaN guard --
         self.queue_bound = queue_bound if queue_bound is not None \
             else knobs.get_int("MOZART_QUEUE_BOUND")
@@ -228,49 +212,39 @@ class ServingEngine:
         self._est_step_s = 0.0
         if self.paged:
             ps = page_size or knobs.get_int("MOZART_KV_PAGE_SIZE")
-            self.pool = paged_kv.PagePool(
-                mcfg, max_batch, max_len, page_size=ps, num_pages=num_pages,
-                quant=self.kv_quant)
-            self.buckets = paged_kv.prefill_buckets(
-                max_len, knobs.get_int("MOZART_PREFILL_BUCKET_MIN"))
-            self.capacity = paged_kv.pool_token_capacity(self.pool, max_len)
-            self.cache = None
+            self.state = state_mod.PagedKVState(
+                mcfg, max_batch, max_len, decode_batch=self.decode_batch,
+                compact=self.compact, page_size=ps, num_pages=num_pages,
+                bucket_min=knobs.get_int("MOZART_PREFILL_BUCKET_MIN"),
+                quantized=self.kv_quant)
+        elif mcfg.family == "whisper":
+            self.state = state_mod.CrossAttnState(
+                mcfg, max_batch, max_len, decode_batch=self.decode_batch,
+                enc_len=enc_len)
+        elif mcfg.family == "transformer":
+            self.state = state_mod.DenseKVState(
+                mcfg, max_batch, max_len, decode_batch=self.decode_batch,
+                compact=self.compact, quantized=self.kv_quant_dense,
+                rewind_hook=_rewind_hook)
         else:
-            self.pool = None
-            self.buckets = ()
-            self.capacity = max_len
-            self.cache = api.init_cache(mcfg, max_batch, max_len)
-            # per-slot cache lengths (vector index -> mixed-length batching)
-            self.cache["index"] = jnp.zeros((max_batch,), jnp.int32)
+            self.state = state_mod.RecurrentState(
+                mcfg, max_batch, max_len, decode_batch=self.decode_batch)
+        self.pool = self.state.pool
+        self.buckets = self.state.buckets
+        self.capacity = self.state.capacity
         self.mesh = mesh
         if mesh is not None:
-            from repro.parallel.sharding import (cache_shardings,
-                                                 paged_cache_shardings,
-                                                 params_shardings)
+            from repro.parallel.sharding import params_shardings
             self.params = jax.device_put(
                 params, params_shardings(mesh, params))
-            if self.paged:
-                self.pool.segments = jax.device_put(
-                    self.pool.segments,
-                    paged_cache_shardings(mesh, self.pool.segments,
-                                          mcfg.kv_heads))
-                if self.kv_quant:
-                    # scale leaves keep kvh on axis 3 (keepdims layout),
-                    # so the same placement rule applies
-                    self.pool.scales = jax.device_put(
-                        self.pool.scales,
-                        paged_cache_shardings(mesh, self.pool.scales,
-                                              mcfg.kv_heads))
-            else:
-                self.cache = jax.device_put(
-                    self.cache, cache_shardings(mesh, self.cache,
-                                                mcfg.kv_heads, max_batch))
+            self.state.place(mesh)
         self.slots: list[Request | None] = [None] * max_batch
         self.queue: list[Request] = []
         self.next_token = np.zeros((max_batch, 1), np.int32)
         self.key = jax.random.PRNGKey(0)
         self._decode = _decode_fn(mcfg)
-        self._prefill = _prefill_fn(mcfg, max_len)
+        self._prefill = state_mod._whisper_prefill_fn(mcfg, max_len) \
+            if mcfg.family == "whisper" else _prefill_fn(mcfg, max_len)
         self._paged_decode = \
             paged_kv.paged_decode_fn(mcfg, self.kv_quant) if self.paged \
             else None
@@ -278,6 +252,12 @@ class ServingEngine:
                       "tokens_out": 0, "slot_occupancy": [],
                       "preemptions": 0, "rejected": 0,
                       "shed": 0, "nan_steps": 0}
+
+    @property
+    def cache(self):
+        """The live model-state pytree (None for paged engines) — owned
+        by the DecodeState; exposed for chaos injection and tests."""
+        return self.state.cache
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -315,8 +295,7 @@ class ServingEngine:
             req.finish_reason = reason
         req.t_done = time.monotonic()
         self.slots[b] = None
-        if self.paged:
-            self.pool.release(b)
+        self.state.release(b)
 
     def _preempt(self, b: int) -> None:
         """Evict slot b under page pressure: free its pages and requeue
@@ -324,7 +303,7 @@ class ServingEngine:
         resumes decoding where it stopped."""
         req = self.slots[b]
         self.slots[b] = None
-        self.pool.release(b)
+        self.state.release(b)
         self.queue.insert(0, req)
         self.stats["preemptions"] += 1
 
@@ -388,7 +367,7 @@ class ServingEngine:
             else:
                 seq = np.asarray(req.prompt, np.int32)
             plen = len(seq)
-            if plen < 1 or plen >= self.capacity:
+            if plen < 1 or plen + self._headroom > self.capacity:
                 self.queue.pop(qi)
                 req.done = True
                 req.finish_reason = "rejected"
@@ -399,13 +378,10 @@ class ServingEngine:
                 # +1: the next decode writes KV at position plen
                 if not self.pool.ensure(b, plen + 1):
                     break       # pool dry — wait for decode-side frees
-                last = self._paged_prefill(b, seq)
+                last = self.state.prefill(self._prefill, self.params,
+                                          b, seq)
             else:
-                toks = jnp.asarray(seq[None, :], jnp.int32)
-                last, cache1 = self._prefill(self.params, toks)
-                idx_vec = self.cache["index"]
-                self.cache = _tree_set_slot(self.cache, cache1, b)
-                self.cache["index"] = idx_vec.at[b].set(plen)
+                last = self._dense_prefill(b, seq, req)
             self.queue.pop(qi)
             self.slots[b] = req
             req.admit_seq = self._admit_counter
@@ -428,25 +404,11 @@ class ServingEngine:
                 self._finish(b, "eos" if tok == self.eos_id
                              else "max_new_tokens")
 
-    def _paged_prefill(self, b: int, seq: np.ndarray):
-        """Bucket-padded prefill of `seq` into slot b's pages; returns
-        the (1, 1, V) last-real-token logits."""
-        plen = len(seq)
-        bucket = paged_kv.bucket_for(plen, self.buckets)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = seq
-        fn = paged_kv.paged_prefill_fn(self.mcfg, bucket, self.pool.page_size,
-                                       self.kv_quant)
-        trow = self.pool.table_row(b, bucket // self.pool.page_size)
-        if self.kv_quant:
-            last, self.pool.segments, self.pool.scales = fn(
-                self.params, toks, plen, self.pool.segments,
-                self.pool.scales, trow)
-        else:
-            last, self.pool.segments = fn(
-                self.params, toks, plen, self.pool.segments, trow)
-        self.pool.index[b] = plen
-        return last
+    def _dense_prefill(self, b: int, seq: np.ndarray, req: Request):
+        """Dense-state prefill hook (SpecDecodeEngine also prefills the
+        draft cache here)."""
+        return self.state.prefill(self._prefill, self.params, b, seq,
+                                  frames=req.frames)
 
     def _select_active(self, all_active: list[int]) -> list[int]:
         """Pick up to decode_batch slots in slot-id rotation.  The cursor
@@ -471,10 +433,10 @@ class ServingEngine:
         t_step = time.monotonic()
         self._admit()
         live = [b for b, r in enumerate(self.slots) if r is not None]
-        # cache-boundary: a slot whose next KV write would land at or past
-        # capacity finishes NOW instead of silently overrunning the slot
+        # cache-boundary: a slot whose next KV write(s) would land at or
+        # past capacity finishes NOW instead of silently overrunning it
         for b in list(live):
-            if self._slot_pos(b) >= self.capacity:
+            if self._slot_pos(b) + self._headroom > self.capacity:
                 self._finish(b, "length")
                 live.remove(b)
         if self.paged:
@@ -482,46 +444,32 @@ class ServingEngine:
         if not live:
             return 0
         active = self._select_active(live)
-        if self.paged:
-            logits, lane = self._paged_step(active)
-        elif self.compact and self.decode_batch < self.max_batch:
-            # compacted sub-batch decode: gather the active slots' cache
-            # slices, decode at static width decode_batch, scatter back.
-            # Padding lanes (fewer active than decode_batch) repeat the
-            # first active slot — identical inputs give identical lane
-            # results, so the duplicate scatter writes are idempotent.
-            sel = active + [active[0]] * (self.decode_batch - len(active))
-            sel_arr = jnp.asarray(sel, jnp.int32)
-            sub = _GATHER(self.cache, sel_arr)
-            logits, new_sub = self._decode(
-                self.params, jnp.asarray(self.next_token[sel]), sub)
-            self.cache = _SCATTER(self.cache, new_sub, sel_arr)
-            lane = {}
-            for j, b in enumerate(sel):
-                lane.setdefault(b, j)
-        else:
-            logits, new_cache = self._decode(
-                self.params, jnp.asarray(self.next_token), self.cache)
-            self.cache = new_cache
-            # full-width decode advanced every slot; slots not advancing
-            # this step must not advance their cache index (one batched
-            # scatter-add, not a per-slot dispatch loop)
-            inactive = [b for b in range(self.max_batch)
-                        if b not in active]
-            if inactive:
-                self.cache["index"] = _rewind_inactive(
-                    self.cache["index"], inactive)
-            lane = {b: b for b in active}
+        if not self._advance(active):
+            return 0            # non-finite logits: emitted nothing
+        self.stats["decode_steps"] += 1
+        self.stats["slot_occupancy"].append(
+            len(live) / self.max_batch)
+        dt = time.monotonic() - t_step
+        # EWMA per-step pace: the deadline-feasibility estimate _admit
+        # sheds against (first measurement seeds it directly)
+        self._est_step_s = dt if self._est_step_s == 0.0 \
+            else 0.8 * self._est_step_s + 0.2 * dt
+        return len(active)
+
+    def _advance(self, active: list[int]) -> bool:
+        """Decode the active slots one step, guard, sample, finish.
+        Returns False when the NaN guard swallowed the step.  Subclasses
+        (spec-decode) replace this with multi-token propose/verify."""
+        fn = self._paged_decode if self.paged else self._decode
+        logits, lane = self.state.decode(fn, self.params,
+                                         self.next_token, active)
         if self.guard_nan and not resilience.logits_finite(logits):
             # corrupted KV / sick kernel: emit NOTHING from non-finite
             # logits (garbage tokens would poison the requests' streams
             # beyond token-exact recovery); flag for the watchdog
             self.health["nan_detected"] = True
             self.stats["nan_steps"] += 1
-            return 0
-        self.stats["decode_steps"] += 1
-        self.stats["slot_occupancy"].append(
-            len(live) / self.max_batch)
+            return False
         for b in active:
             req = self.slots[b]
             self.key, k = jax.random.split(self.key)
@@ -534,12 +482,7 @@ class ServingEngine:
                     tok == self.eos_id:
                 self._finish(b, "eos" if tok == self.eos_id
                              else "max_new_tokens")
-        dt = time.monotonic() - t_step
-        # EWMA per-step pace: the deadline-feasibility estimate _admit
-        # sheds against (first measurement seeds it directly)
-        self._est_step_s = dt if self._est_step_s == 0.0 \
-            else 0.8 * self._est_step_s + 0.2 * dt
-        return len(active)
+        return True
 
     def _grow_pages(self, live: list[int]) -> list[int]:
         """Make every live slot's next KV write backed by a page,
@@ -558,30 +501,6 @@ class ServingEngine:
                     self._preempt(v)
                     live.remove(v)
         return live
-
-    def _paged_step(self, active: list[int]):
-        """One gathered decode over the page pool at a fixed lane width
-        (decode_batch when compacting, max_batch for the full-width
-        emulation) — a single executable either way."""
-        width = self.decode_batch if self.compact else self.max_batch
-        sel = active + [active[0]] * (width - len(active))
-        tables_sel = self.pool.tables[np.asarray(sel)]
-        index_sel = self.pool.index[np.asarray(sel)]
-        if self.kv_quant:
-            logits, self.pool.segments, self.pool.scales = self._paged_decode(
-                self.params, jnp.asarray(self.next_token[sel]),
-                self.pool.segments, self.pool.scales, tables_sel, index_sel)
-        else:
-            logits, self.pool.segments = self._paged_decode(
-                self.params, jnp.asarray(self.next_token[sel]),
-                self.pool.segments, tables_sel, index_sel)
-        # page-table bookkeeping is host-side numpy: advance the lengths
-        # here instead of round-tripping them through the device
-        self.pool.index[np.asarray(active)] += 1
-        lane: dict[int, int] = {}
-        for j, b in enumerate(sel):
-            lane.setdefault(b, j)
-        return logits, lane
 
     def run(self, max_steps: int = 10_000) -> None:
         steps = 0

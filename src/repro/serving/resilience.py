@@ -166,9 +166,20 @@ def inject_nan(eng) -> bool:
             eng.pool.segments = jax.tree.map(lambda a: a.at[:, p].set(jnp.nan), eng.pool.segments)
     else:
         b = live[0]
-        eng.cache["segments"] = jax.tree.map(
-            lambda a: a.at[:, b].set(jnp.nan) if a.ndim >= 2 else a, eng.cache["segments"]
-        )
+        state = getattr(eng, "state", None)
+        if state is not None and getattr(state, "quantized", False):
+            # int8 rectangles: poison the slot's scales, like quant pools
+            state.scales = jax.tree.map(lambda s: s.at[:, b].set(jnp.nan), state.scales)
+        elif "segments" in eng.cache:
+            # transformer dense rectangles: leaves are (L, B, C, ...)
+            eng.cache["segments"] = jax.tree.map(
+                lambda a: a.at[:, b].set(jnp.nan) if a.ndim >= 2 else a, eng.cache["segments"]
+            )
+        else:
+            # recurrent / cross-attn layers layout: batch on axis 0
+            eng.cache["layers"] = jax.tree.map(
+                lambda a: a.at[b].set(jnp.nan) if a.ndim >= 1 else a, eng.cache["layers"]
+            )
     return True
 
 

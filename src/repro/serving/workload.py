@@ -56,6 +56,7 @@ def zipf_mix_requests(
     max_new_tokens: int = 16,
     rid0: int = 0,
     deadline_bands: tuple[tuple[float, float] | None, ...] | None = None,
+    model: str | None = None,
 ) -> list[Request]:
     """`n` requests with Zipf-weighted prompt lengths over `bands`.
 
@@ -68,6 +69,8 @@ def zipf_mix_requests(
     mix leaves the prompt trace (and any draws the caller makes from
     `rng` afterwards, e.g. Poisson arrivals) byte-for-byte unchanged —
     and `deadline_bands=None` is the exact historical trace.
+    `model` stamps every request's routing tag for mixed-family fleets
+    (host-side metadata: the token trace is untouched).
     """
     weights = zipf_band_weights(len(bands))
     dl_rng = rng.spawn(1)[0] if deadline_bands is not None else None
@@ -88,9 +91,38 @@ def zipf_mix_requests(
                 prompt=prompt,
                 max_new_tokens=max_new_tokens,
                 deadline_s=deadline,
+                model=model,
             )
         )
     return reqs
+
+
+def synthetic_frames(
+    rng: np.random.Generator, n_frames: int, d_model: int
+) -> np.ndarray:
+    """A (n_frames, d_model) float32 block of standard-normal encoder
+    frame embeddings — the whisper requests' `Request.frames` payload
+    (the serving layer pads/truncates it to the engine's fixed window).
+    Drawn from the caller's `rng` so a seed pins the audio trace just
+    like the token traces."""
+    return rng.standard_normal((n_frames, d_model)).astype(np.float32)
+
+
+def interleave_tagged(traces: list[list[Request]]) -> list[Request]:
+    """Round-robin merge of per-model request traces into one submission
+    order (trace i's requests keep their relative order), re-numbering
+    `rid` so the merged trace has unique ids.  The deterministic mixer
+    the mixed-family cluster benchmarks and tests submit."""
+    merged: list[Request] = []
+    cursors = [0] * len(traces)
+    while any(c < len(t) for c, t in zip(cursors, traces)):
+        for j, t in enumerate(traces):
+            if cursors[j] < len(t):
+                merged.append(t[cursors[j]])
+                cursors[j] += 1
+    for i, r in enumerate(merged):
+        r.rid = i
+    return merged
 
 
 def poisson_arrivals(rng: np.random.Generator, n: int, rate: float) -> np.ndarray:

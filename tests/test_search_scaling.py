@@ -231,14 +231,19 @@ def test_compare_gate_thresholds(tmp_path):
                            "max_goodput_violations": 0,
                            "require_exact_tokens": True,
                            "require_outage_survival": True,
-                           "min_quarantined": 2}}
+                           "min_quarantined": 2},
+                 "specdec": {"min_speedup": 1.2,
+                             "require_token_exact": True,
+                             "min_acceptance": 0.99,
+                             "max_steady_state_recompiles": 0}}
 
     def write(speedup, identical, mono, batch_speedup=3.0,
               batch_identical=True, serving_speedup=1.5,
               serving_identical=True, cluster_speedup=1.8,
               cluster_equal=True, quant_match=0.9, quant_cap=3.5,
               goodput_frac=0.8, goodput_viol=0, chaos_exact=True,
-              outage_ok=True, quarantined=2):
+              outage_ok=True, quarantined=2, spec_speedup=1.6,
+              spec_exact=True, spec_acc=1.0, spec_rec=0):
         (tmp_path / "BENCH_codesign_search.json").write_text(json.dumps(
             {"speedup": speedup, "identical_best_design": identical}))
         (tmp_path / "BENCH_budget_scaling.json").write_text(json.dumps(
@@ -264,6 +269,12 @@ def test_compare_gate_thresholds(tmp_path):
              "outage_tokens_exact": outage_ok,
              "outage_unrouted": 4,
              "quarantined": quarantined}))
+        (tmp_path / "BENCH_specdec.json").write_text(json.dumps(
+            {"speedup_specdec_vs_target": spec_speedup,
+             "token_exact": spec_exact,
+             "acceptance_rate": spec_acc,
+             "steady_state_recompiles": {"specdec": spec_rec,
+                                         "target_only": 0}}))
 
     write(5.0, True, True)
     assert check(str(tmp_path), baselines) == []
@@ -304,5 +315,16 @@ def test_compare_gate_thresholds(tmp_path):
     assert any("total-outage" in f for f in check(str(tmp_path), baselines))
     write(5.0, True, True, quarantined=1)        # watchdog missed a silent fault
     assert any("quarantined only" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, spec_speedup=1.0)     # live spec-decode regression
+    assert any("specdec" in f and "regressed" in f
+               for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, spec_exact=False)     # verify/rewind no longer exact
+    assert any("target-only engine" in f
+               for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, spec_acc=0.5)         # acceptance below the ceiling
+    assert any("acceptance" in f for f in check(str(tmp_path), baselines))
+    write(5.0, True, True, spec_rec=3)           # spec loop retraces per step
+    assert any("specdec" in f and "recompiles" in f
+               for f in check(str(tmp_path), baselines))
     assert any("missing artifact" in f
                for f in check(str(tmp_path / "nope"), baselines))

@@ -68,10 +68,10 @@ def _stub_engine(max_batch=4, decode_batch=None, compact=True, vocab=61):
     return eng
 
 
-def test_non_transformer_family_falls_back_to_emulation():
-    """The compacted gather knows the transformer cache layout; other
-    families must silently keep the full-width schedule emulation (the
-    gather would KeyError on their {"layers": ...} caches)."""
+def test_non_transformer_family_always_compacts():
+    """Recurrent families advance state irreversibly — there is nothing
+    to rewind after a full-width emulation step — so their DecodeState is
+    ALWAYS the gathered sub-batch form, regardless of the compact knob."""
     rglru_cfg = ModelConfig(
         name="tiny-rglru",
         family="rglru",
@@ -91,7 +91,13 @@ def test_non_transformer_family_falls_back_to_emulation():
     eng = ServingEngine(
         rglru_cfg, params={}, max_batch=4, max_len=16, decode_batch=2
     )
-    assert eng.compact is False
+    assert eng.compact is True
+    assert eng.state.kind == "recurrent"
+    eng_full = ServingEngine(
+        rglru_cfg, params={}, max_batch=4, max_len=16, decode_batch=2,
+        compact=False
+    )
+    assert eng_full.compact is True
     tf_eng = _stub_engine(max_batch=4, decode_batch=2)
     assert tf_eng.compact is True
 
